@@ -1,0 +1,83 @@
+"""Shared benchmark plumbing: scenario builders + CSV emission.
+
+Every benchmark module exposes ``run(quick: bool) -> list[dict]`` and is
+driven by ``benchmarks.run``.  ``quick`` trims workload sizes so the whole
+suite finishes in minutes on CPU; full-scale parameters (matching the
+paper's ~2M-packet traces) are the defaults for standalone runs.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+ART_DIR = os.environ.get("REPRO_ARTIFACTS", "artifacts/bench")
+
+
+def emit(name: str, rows: List[Dict]) -> None:
+    if not rows:
+        print(f"[{name}] no rows")
+        return
+    os.makedirs(ART_DIR, exist_ok=True)
+    keys = list(rows[0].keys())
+    path = os.path.join(ART_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    out = io.StringIO()
+    w = csv.DictWriter(out, fieldnames=keys)
+    w.writeheader()
+    w.writerows(rows)
+    print(f"== {name} ==")
+    print(out.getvalue().rstrip())
+    print(f"-> {path}")
+
+
+def fat_tree_scenario(quick: bool, *, het: float, seed: int = 1,
+                      arrival: str = "paced"):
+    """The §6.1 evaluation scenario."""
+    from repro.net.topology import FatTree
+    from repro.net.traffic import gen_workload, gini_memories
+    from repro.net.simulator import Replayer
+    topo = FatTree(4)
+    n_flows = 20_000 if quick else 200_000
+    pkts = 200_000 if quick else 2_000_000
+    n_epochs = 16 if quick else 32
+    wl = gen_workload(topo, n_flows=n_flows, total_packets=pkts,
+                      n_epochs=n_epochs, burstiness=0.2, seed=seed,
+                      arrival=arrival)
+    rep = Replayer(wl, topo.n_switches)
+    rng = np.random.RandomState(seed + 100)
+    return topo, wl, rep, rng
+
+
+def memories_for(topo, base_bytes: int, het: float, rng):
+    from repro.net.traffic import gini_memories
+    if het <= 0:
+        vals = np.full(topo.n_switches, base_bytes, dtype=np.int64)
+    else:
+        vals = gini_memories(topo.n_switches, base_bytes, het, rng)
+    return {sw: int(vals[sw]) for sw in range(topo.n_switches)}
+
+
+def full_path_queries(wl):
+    sel = wl.path_len == 5
+    keys = wl.keys[sel]
+    truth = wl.sizes[sel]
+    paths = [p for p, s in zip(wl.paths, sel) if s]
+    return sel, keys, truth, paths
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

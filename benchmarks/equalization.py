@@ -1,0 +1,40 @@
+"""Benchmark: the Eq. 6 control loop — per-epoch convergence of n and PEB
+toward rho_target across heterogeneous fragments (paper §4.2; no direct
+figure, supports the §6.3 takeaway)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, fat_tree_scenario, memories_for
+
+
+def run(quick: bool = True):
+    from repro.core.disketch import DiSketchSystem, calibrate_rho_target
+
+    topo, wl, rep, rng = fat_tree_scenario(quick, het=0.4, seed=7)
+    mems = memories_for(topo, 16 * 1024, 0.4, rng)
+    rho = calibrate_rho_target(mems, "cs",
+                               rep.epoch_stream(wl.n_epochs // 2),
+                               wl.log2_te)
+    sysd = DiSketchSystem(mems, "cs", rho_target=rho, log2_te=wl.log2_te)
+    rep.run(sysd)
+    rows = []
+    for e, (pebs, ns) in enumerate(zip(sysd.peb_log, sysd.n_log)):
+        p = np.array([v for v in pebs.values() if v > 0])
+        in_band = float(np.mean((p >= rho / 2) & (p <= 2 * rho))) \
+            if len(p) else 0.0
+        rows.append({
+            "epoch": e, "rho_target": round(rho, 2),
+            "peb_p10": round(float(np.percentile(p, 10)), 2),
+            "peb_median": round(float(np.median(p)), 2),
+            "peb_p90": round(float(np.percentile(p, 90)), 2),
+            "frac_in_band": round(in_band, 3),
+            "n_min": min(ns.values()), "n_median": int(np.median(
+                list(ns.values()))), "n_max": max(ns.values()),
+        })
+    emit("equalization", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

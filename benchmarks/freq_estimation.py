@@ -1,0 +1,62 @@
+"""Benchmark: flow-frequency estimation error vs per-switch memory
+(paper Fig. 12) — DiSketch vs DISCO vs aggregated, CS/CMS/UM,
+homogeneous + heterogeneous Fat-Tree.
+
+Reports RMSE over full-path (5-hop) flows, exactly as §6.1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, fat_tree_scenario, full_path_queries, memories_for
+
+
+def run(quick: bool = True):
+    from repro.core.disketch import (AggregatedSystem, DiSketchSystem,
+                                     DiscoSystem, calibrate_rho_target)
+    from repro.net.simulator import rmse
+    from repro.net.topology import core_on_path
+
+    rows = []
+    mem_grid = [8, 32, 128, 512] if quick else [8, 32, 128, 512, 1024]
+    kinds = ["cs", "cms"] if quick else ["cs", "cms", "um"]
+    for het in [0.0, 0.4]:
+        topo, wl, rep, rng = fat_tree_scenario(quick, het=het)
+        sel, keys, truth, paths = full_path_queries(wl)
+        epochs = list(range(wl.n_epochs))
+        core = core_on_path(wl.path_mat[sel], topo.core_ids)
+        for kind in kinds:
+            for mem_kb in mem_grid:
+                mems = memories_for(topo, mem_kb * 1024, het, rng)
+                rho = calibrate_rho_target(
+                    mems, kind, rep.epoch_stream(wl.n_epochs // 2),
+                    wl.log2_te)
+                dis = DiSketchSystem(mems, kind, rho_target=rho,
+                                     log2_te=wl.log2_te)
+                rep.run(dis)
+                e_dis = rmse(dis.query_flows(keys, paths, epochs), truth)
+                disco = DiscoSystem(mems, kind, rho_target=0,
+                                    log2_te=wl.log2_te)
+                rep.run(disco)
+                e_disco = rmse(disco.query_flows(keys, paths, epochs),
+                               truth)
+                agg = AggregatedSystem(
+                    {sw: mems[sw] for sw in topo.core_ids}, kind, depth=4)
+                rep.run(agg)
+                e_agg = rmse(agg.query_flows(keys, core, epochs), truth)
+                rows.append({
+                    "sketch": kind, "het_gini": het, "mem_kb": mem_kb,
+                    "rho_target": round(rho, 2),
+                    "rmse_aggregated": round(e_agg, 4),
+                    "rmse_disco": round(e_disco, 4),
+                    "rmse_disketch": round(e_dis, 4),
+                    "disketch_vs_disco": round(
+                        e_disco / max(e_dis, 1e-12), 2),
+                    "n_max": max(dis.ns.values()),
+                })
+    emit("freq_estimation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

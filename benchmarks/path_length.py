@@ -1,0 +1,54 @@
+"""Benchmark: path-length effects + single-hop mitigation (paper Fig. 16)
+— per-path-length RMSE for DISCO-CS / DiSketch-CS / DiSketch-CS+mitigation
+in the heterogeneous Fat-Tree."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, fat_tree_scenario, memories_for
+
+
+def run(quick: bool = True):
+    from repro.core.disketch import (DiSketchSystem, DiscoSystem,
+                                     calibrate_rho_target)
+    from repro.net.simulator import rmse
+
+    rows = []
+    topo, wl, rep, rng = fat_tree_scenario(quick, het=0.4, seed=4)
+    epochs = list(range(wl.n_epochs))
+    for mem_kb in ([8, 512] if quick else [8, 64, 512, 1024]):
+        mems = memories_for(topo, mem_kb * 1024, 0.4, rng)
+        rho = calibrate_rho_target(mems, "cs",
+                                   rep.epoch_stream(wl.n_epochs // 2),
+                                   wl.log2_te)
+        systems = {}
+        for name, kw in [("disco", dict(cls="disco")),
+                         ("disketch", dict(cls="dis", mit=False)),
+                         ("disketch_mitigated", dict(cls="dis", mit=True))]:
+            if kw["cls"] == "disco":
+                s = DiscoSystem(mems, "cs", rho_target=0,
+                                log2_te=wl.log2_te)
+            else:
+                s = DiSketchSystem(mems, "cs", rho_target=rho,
+                                   log2_te=wl.log2_te,
+                                   mitigation=kw["mit"])
+            rep.run(s)
+            systems[name] = s
+        for plen in [1, 3, 5]:
+            sel = wl.path_len == plen
+            if not sel.any():
+                continue
+            keys, truth = wl.keys[sel], wl.sizes[sel]
+            paths = [p for p, s in zip(wl.paths, sel) if s]
+            row = {"mem_kb": mem_kb, "path_len": plen,
+                   "n_flows": int(sel.sum()), "rho": round(rho, 1)}
+            for name, s in systems.items():
+                row[f"rmse_{name}"] = round(
+                    rmse(s.query_flows(keys, paths, epochs), truth), 4)
+            rows.append(row)
+    emit("path_length", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

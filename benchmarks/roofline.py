@@ -1,0 +1,69 @@
+"""Roofline report: reads the dry-run JSON artifacts and renders the
+per-(arch x shape x mesh) three-term table (§Roofline of EXPERIMENTS.md).
+
+    compute term    = HLO_FLOPs(per-device) / peak_FLOP/s
+    memory term     = HLO_bytes(per-device) / HBM_bw
+    collective term = collective_bytes(per-device) / link_bw
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "artifacts/dryrun")
+
+
+def load_cells(dryrun_dir: str = DRYRUN_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(quick: bool = True):
+    cells = load_cells()
+    rows = []
+    for c in cells:
+        if c.get("status") != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "mesh": c["mesh"], "status": c.get("status"),
+                         "compute_ms": None, "memory_ms": None,
+                         "collective_ms": None, "dominant": None,
+                         "step_lower_bound_ms": None,
+                         "useful_flops_frac": None,
+                         "roofline_fraction": None})
+            continue
+        terms = {"compute": c["compute_s"], "memory": c["memory_s"],
+                 "collective": c["collective_s"]}
+        lb = max(terms.values())
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "status": "ok",
+            "compute_ms": round(c["compute_s"] * 1e3, 3),
+            "memory_ms": round(c["memory_s"] * 1e3, 3),
+            "collective_ms": round(c["collective_s"] * 1e3, 3),
+            "dominant": c["dominant"],
+            "step_lower_bound_ms": round(lb * 1e3, 3),
+            "useful_flops_frac": round(c.get("useful_flops_frac") or 0, 4),
+            # fraction of roofline the step achieves if it ran exactly at
+            # the binding term (compute_term / max term):
+            "roofline_fraction": round(c["compute_s"] / lb, 4) if lb else None,
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    emit("roofline", rows)
+    if rows:
+        ok = [r for r in rows if r["status"] == "ok"]
+        print(f"\n{len(ok)}/{len(rows)} cells ok; dominant terms:",
+              {d: sum(1 for r in ok if r['dominant'] == d)
+               for d in ("compute", "memory", "collective")})
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

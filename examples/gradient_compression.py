@@ -1,0 +1,80 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps with DiSketch gradient compression and fault-tolerant
+checkpointing.
+
+    PYTHONPATH=src python examples/gradient_compression.py \
+        [--steps 300] [--dim 512] [--layers 8]
+
+The compressor is the paper's spatiotemporal disaggregation mapped onto
+data-parallel training (DESIGN.md §4): each worker holds Count-Sketch row
+fragments (space), parameter coordinates are spread over subepochs
+(time), and the merged sketch is centrally queried for top-k recovery
+with error feedback.
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as MDL
+from repro.train.compress import DisketchCompressor
+from repro.train.optimizer import cosine_schedule
+from repro.train.train_step import init_train_state, make_train_step
+from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--dim", type=int, default=512)
+ap.add_argument("--layers", type=int, default=8)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--ckpt", default="/tmp/disketch_ckpt")
+args = ap.parse_args()
+
+# a ~100M-param llama-family config (vocab 49152 x 512 dominates)
+cfg = reduced(get_config("granite-8b"), n_layers=args.layers,
+              d_model=args.dim, d_ff=4 * args.dim, vocab=49152,
+              n_heads=8, n_kv_heads=4, d_head=args.dim // 8,
+              name="granite-100m")
+params = MDL.init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+print(f"model: {cfg.name}, {n_params / 1e6:.1f}M params")
+
+comp = DisketchCompressor(width=max(n_params // 64, 4096), depth=4,
+                          n_sub=2, k_frac=0.02)
+print(f"DiSketch compressor: {comp.depth}x{comp.width} sketch, "
+      f"n_sub={comp.n_sub}, comm reduction "
+      f"{n_params * 4 / (comp.depth * comp.width * 4):.0f}x per step")
+
+step_fn = jax.jit(make_train_step(
+    cfg, cosine_schedule(3e-4, args.steps // 10, args.steps),
+    compressor=comp, sp=False))
+state = init_train_state(params, comp)
+
+restored, rstep, _ = restore_checkpoint(args.ckpt, state)
+start = 0
+if restored is not None:
+    state, start = restored, int(rstep)
+    print(f"resumed from checkpoint step {start}")
+
+data = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=3)
+t0 = time.time()
+for step in range(start, args.steps):
+    state, metrics = step_fn(state, data.batch(step))
+    if (step + 1) % 20 == 0:
+        print(f"step {step + 1:4d}  loss={float(metrics['loss']):.4f}  "
+              f"gnorm={float(metrics['grad_norm']):.2f}  "
+              f"({(time.time() - t0) / (step - start + 1):.2f}s/step)",
+              flush=True)
+    if (step + 1) % 100 == 0:
+        save_checkpoint(args.ckpt, step + 1, state)
+print(f"trained {args.steps - start} steps in {time.time() - t0:.0f}s; "
+      f"final loss {float(metrics['loss']):.4f}")

@@ -1,0 +1,5 @@
+from .base import (ModelConfig, ShapeConfig, SHAPES, LONG_CONTEXT_OK,
+                   get_config, list_configs, reduced, register)
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "LONG_CONTEXT_OK",
+           "get_config", "list_configs", "reduced", "register"]

@@ -1,0 +1,10 @@
+"""Import side-effect module: registers every assigned architecture."""
+from . import (granite_8b, minicpm_2b, codeqwen15_7b, gemma2_2b,
+               internvl2_76b, musicgen_medium, deepseek_moe_16b,
+               olmoe_1b_7b, zamba2_2_7b, falcon_mamba_7b)  # noqa: F401
+
+ALL_ARCHS = [
+    "granite-8b", "minicpm-2b", "codeqwen1.5-7b", "gemma2-2b",
+    "internvl2-76b", "musicgen-medium", "deepseek-moe-16b", "olmoe-1b-7b",
+    "zamba2-2.7b", "falcon-mamba-7b",
+]

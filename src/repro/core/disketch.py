@@ -1,0 +1,208 @@
+"""DiSketch system orchestration: fragments + control loop + query plane.
+
+Ties together the per-node fragments (fragment.py), the error-equalization
+control loop (equalize.py), and the central query engine (query.py) into the
+system of Fig. 7: per-switch single-row fragments, subepoch records streamed
+to a controller, composite queries over query windows.
+
+``DiscoSystem`` is the DISCO baseline [17]: identical per-row disaggregation
+but no subepoching (n = 1 always) and no error equalization.
+``AggregatedSystem`` is the traditional baseline: a full (depth x width)
+sketch on each core switch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import equalize, query, sketches
+from .fragment import EpochRecords, FragmentConfig, process_epoch
+
+
+@dataclass
+class SwitchStream:
+    """Packets traversing one switch during one epoch."""
+    keys: np.ndarray         # uint32 flow ids
+    values: np.ndarray       # int64 increments (1 per packet for counts)
+    ts: np.ndarray           # int64 timestamps
+    single_hop: Optional[np.ndarray] = None  # bool, §4.4
+
+
+class DiSketchSystem:
+    """The paper's system: spatiotemporally disaggregated sketching."""
+
+    name = "disketch"
+    subepoching = True
+
+    def __init__(self, switch_memories: Dict[int, int], kind: str,
+                 rho_target: float, log2_te: int, counter_bytes: int = 4,
+                 mitigation: bool = False, n_levels: int = 16, seed: int = 0):
+        self.kind = kind
+        self.rho_target = rho_target
+        self.log2_te = log2_te
+        self.fragments: Dict[int, FragmentConfig] = {
+            sw: FragmentConfig(frag_id=sw, kind=kind, memory_bytes=mem,
+                               counter_bytes=counter_bytes,
+                               mitigation=mitigation, n_levels=n_levels,
+                               base_seed=seed)
+            for sw, mem in switch_memories.items()
+        }
+        # rho_-1 undefined: start every fragment at n_0 = 1 (§4.2).
+        self.ns: Dict[int, int] = {sw: 1 for sw in switch_memories}
+        self.records: Dict[int, Dict[int, EpochRecords]] = {}  # epoch -> sw
+        self.peb_log: List[Dict[int, float]] = []
+        self.n_log: List[Dict[int, int]] = []
+
+    def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream]) -> None:
+        epoch_start = epoch << self.log2_te
+        recs: Dict[int, EpochRecords] = {}
+        pebs: Dict[int, float] = {}
+        for sw, cfg in self.fragments.items():
+            st = streams.get(sw)
+            n = self.ns[sw] if self.subepoching else 1
+            if st is None or len(st.keys) == 0:
+                st = SwitchStream(np.zeros(0, np.uint32), np.zeros(0, np.int64),
+                                  np.zeros(0, np.int64))
+            rec = process_epoch(cfg, epoch, n, st.keys, st.values, st.ts,
+                                epoch_start, self.log2_te,
+                                single_hop=st.single_hop)
+            recs[sw] = rec
+            pebs[sw] = equalize.peb_epoch(rec)
+            if self.subepoching:
+                self.ns[sw] = equalize.next_n(n, pebs[sw], self.rho_target)
+        self.records[epoch] = recs
+        self.peb_log.append(pebs)
+        self.n_log.append(dict(self.ns))
+
+    # -- query plane --------------------------------------------------------
+
+    def _records_for(self, path: Sequence[int],
+                     epochs: Sequence[int]) -> List[List[EpochRecords]]:
+        return [[self.records[e][sw] for sw in path if sw in self.records[e]]
+                for e in epochs if e in self.records]
+
+    def query_flows(self, keys: np.ndarray, paths: Sequence[Tuple[int, ...]],
+                    epochs: Sequence[int],
+                    merge: str = "subepoch") -> np.ndarray:
+        """Window frequency estimates for flows with per-flow paths."""
+        keys = np.asarray(keys, dtype=np.uint32)
+        out = np.zeros(len(keys))
+        by_path: Dict[Tuple[int, ...], List[int]] = {}
+        for i, p in enumerate(paths):
+            by_path.setdefault(tuple(p), []).append(i)
+        for path, idxs in by_path.items():
+            idxs = np.asarray(idxs)
+            sh = np.full(len(idxs), len(path) == 1)
+            out[idxs] = query.query_window(
+                self._records_for(path, epochs), keys[idxs], self.kind,
+                single_hop=sh, merge=merge)
+        return out
+
+    def query_entropy(self, keys: np.ndarray,
+                      paths: Sequence[Tuple[int, ...]],
+                      epochs: Sequence[int], total: float,
+                      n_levels: int = 16, level_seed: int = 7777,
+                      k_heavy: int = 1024) -> float:
+        assert self.kind == "um"
+        by_path: Dict[Tuple[int, ...], List[int]] = {}
+        for i, p in enumerate(paths):
+            by_path.setdefault(tuple(p), []).append(i)
+        keys = np.asarray(keys, dtype=np.uint32)
+        recs, keysets = [], []
+        for path, idxs in by_path.items():
+            recs.append(self._records_for(path, epochs))
+            keysets.append(keys[np.asarray(idxs)])
+        return query.um_entropy_window(recs, keysets, n_levels, level_seed,
+                                       total, k_heavy=k_heavy)
+
+
+def calibrate_rho_target(switch_memories: Dict[int, int], kind: str,
+                         streams: Dict[int, SwitchStream], log2_te: int,
+                         quantile: float = 0.5, **kw) -> float:
+    """Select a network-wide rho_target from a probe epoch (§4.2/§7).
+
+    Runs one epoch with n = 1 everywhere and returns a quantile of the
+    observed per-fragment PEBs: the target is what well-provisioned
+    fragments already deliver; worse fragments subsample time (raise n)
+    until they match it.  The median (0.5) won a quantile sweep on the
+    Fat-Tree scenarios (lower quantiles over-subdivide healthy fragments
+    and pay slot-coverage loss; higher ones degenerate to DISCO),
+    consistent with the paper's "within a factor of two is forgiving".
+    """
+    probe = DiSketchSystem(switch_memories, kind, rho_target=float("inf"),
+                           log2_te=log2_te, **kw)
+    probe.run_epoch(0, streams)
+    pebs = [p for p in probe.peb_log[0].values() if p > 0]
+    if not pebs:
+        return 1.0
+    return float(max(np.quantile(pebs, quantile), 1.0))
+
+
+class DiscoSystem(DiSketchSystem):
+    """DISCO [17]: per-row disaggregation, no subepoching / equalization."""
+
+    name = "disco"
+    subepoching = False
+
+
+class AggregatedSystem:
+    """Traditional deployment: a full sketch on each core switch (§6)."""
+
+    name = "aggregated"
+
+    def __init__(self, core_memories: Dict[int, int], kind: str,
+                 depth: int = 4, counter_bytes: int = 4, n_levels: int = 16,
+                 seed: int = 0):
+        self.kind = kind
+        self.depth = depth
+        self.n_levels = n_levels
+        self.specs: Dict[int, object] = {}
+        self.counters: Dict[int, Dict[int, np.ndarray]] = {}  # epoch -> sw
+        self._cur: Dict[int, np.ndarray] = {}
+        for sw, mem in core_memories.items():
+            w = max(mem // (counter_bytes * depth), 4)
+            if kind == "um":
+                w = max(w // n_levels, 4)
+                self.specs[sw] = sketches.UnivMonSpec(depth, w, n_levels,
+                                                      seed=seed + sw)
+            else:
+                self.specs[sw] = sketches.SketchSpec(kind, depth, w,
+                                                     seed=seed + sw)
+
+    def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream]) -> None:
+        recs = {}
+        for sw, spec in self.specs.items():
+            st = streams.get(sw)
+            if self.kind == "um":
+                c = sketches.um_make_counters(spec)
+                if st is not None and len(st.keys):
+                    c = sketches.um_update(spec, c, st.keys, st.values)
+            else:
+                c = sketches.make_counters(spec)
+                if st is not None and len(st.keys):
+                    c = sketches.update(spec, c, st.keys, st.values)
+            recs[sw] = c
+        self.counters[epoch] = recs
+
+    def query_flows(self, keys: np.ndarray, core_switch: Sequence[int],
+                    epochs: Sequence[int]) -> np.ndarray:
+        """Query each flow at the (single) core switch on its path."""
+        keys = np.asarray(keys, dtype=np.uint32)
+        out = np.zeros(len(keys))
+        by_sw: Dict[int, List[int]] = {}
+        for i, sw in enumerate(core_switch):
+            by_sw.setdefault(int(sw), []).append(i)
+        for sw, idxs in by_sw.items():
+            idxs = np.asarray(idxs)
+            spec = self.specs[sw]
+            for e in epochs:
+                if e not in self.counters:
+                    continue
+                c = self.counters[e][sw]
+                if self.kind == "um":
+                    out[idxs] += sketches.um_query_freq(spec, c, keys[idxs])
+                else:
+                    out[idxs] += sketches.query(spec, c, keys[idxs])
+        return out

@@ -1,0 +1,43 @@
+"""Error equalization (paper §4.2): PEB estimation + the n-control loop.
+
+Each fragment estimates its probabilistic error bound (PEB) from its own
+counters (Eq. 4), averages it over the epoch's subepochs (Eq. 5), and
+doubles/halves its number of subepochs for the next epoch to approach the
+network-wide target (Eq. 6).  Runs host-side at epoch transitions, exactly
+mirroring the paper's ASIC/CPU split (Fig. 10).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .fragment import EpochRecords
+
+N_MAX = 1 << 10  # safety cap on subepochs (not in the paper; never hit in
+#                  our experiments, present to bound record volume).
+
+
+def peb_row(counters: np.ndarray, kind: str) -> float:
+    """Eq. 4: estimated PEB of one subepoch record from its counters."""
+    c = counters.astype(np.float64)
+    w = c.shape[-1]
+    if kind in ("cs", "um"):
+        return float(np.sqrt((c * c).sum() / w))
+    return float(np.abs(c).sum() / w)
+
+
+def peb_epoch(rec: EpochRecords) -> float:
+    """Eq. 5: mean estimated PEB over the epoch's subepochs."""
+    counters = rec.counters
+    if rec.kind == "um":
+        counters = counters[0]  # level 0 sees the full stream (§4.2, UnivMon)
+    return float(np.mean([peb_row(counters[s], rec.kind)
+                          for s in range(rec.n)]))
+
+
+def next_n(n: int, peb: float, rho_target: float) -> int:
+    """Eq. 6: moving adjustment of the subepoch count."""
+    if peb > 2.0 * rho_target:
+        return min(2 * n, N_MAX)
+    if peb < rho_target / 2.0:
+        return max(1, n // 2)
+    return n

@@ -1,0 +1,207 @@
+"""Sketch fragments: single-row sketches with subepoching (paper §4.1).
+
+A fragment is the unit of disaggregation: one sketch row (per UnivMon level)
+hosted at one network node, sized to that node's residual memory.  Each
+epoch is divided into ``n`` (a power of two) subepochs; a flow is monitored
+only during subepoch ``s_E(flow)`` (plus a second subepoch for single-hop
+flows when mitigation is enabled, §4.4).
+
+Insertion semantics are batched: counter *reads* never happen at insert time
+(insert-only sketches), so accumulating a whole subepoch of packets in one
+histogram is exactly equivalent to the paper's per-packet increments.  The
+subepoch boundary is respected by construction: the per-packet subepoch id
+is derived from the packet timestamp (Method 2 of §5, bit-slice of the
+timestamp), and scatter targets are (subepoch, column) pairs, so one call
+produces all of the epoch's subepoch records at once.
+
+Two execution backends:
+  * numpy (``np.bincount``) — used by the network simulator for wall-time;
+  * jnp / Pallas (``repro.kernels.sketch_update``) — the TPU deployment
+    path, validated against this file in tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import hashing as H
+
+# Seeds are derived deterministically from (fragment_id, epoch, role) so that
+# the central query engine can recompute every hash function (the record's
+# ``h`` field in the paper is carried implicitly as these ids).
+_ROLE_COL, _ROLE_SIGN, _ROLE_SUB = 0x1000, 0x2000, 0x3000
+
+
+def frag_seed(frag_id: int, epoch: int, role: int, base_seed: int = 0) -> int:
+    return int((frag_id * 1_000_003 + epoch * 7919 + role + base_seed) & 0x7FFFFFFF)
+
+
+@dataclass
+class FragmentConfig:
+    frag_id: int
+    kind: str                 # "cs" | "cms" | "um"
+    memory_bytes: int
+    counter_bytes: int = 4
+    n_levels: int = 16        # UnivMon only
+    level_seed: int = 7777    # network-wide (must match across fragments)
+    mitigation: bool = False  # §4.4 single-hop enhancement
+    base_seed: int = 0
+
+    @property
+    def width(self) -> int:
+        w = self.memory_bytes // self.counter_bytes
+        if self.kind == "um":
+            w = w // self.n_levels
+        return max(int(w), 4)
+
+
+@dataclass
+class EpochRecords:
+    """All subepoch records of one fragment for one epoch (stacked).
+
+    Equivalent to the paper's set {R = (F, E, S, n, c, h)} for fixed (F, E):
+    ``counters[s]`` is the ``c`` of subepoch ``s``; hash functions ``h`` are
+    recomputable from (frag_id, epoch) via ``frag_seed``.
+    """
+
+    frag_id: int
+    epoch: int
+    n: int
+    counters: np.ndarray          # (n, w) or (L, n, w) for UnivMon
+    kind: str
+    mitigation: bool
+    base_seed: int = 0
+
+    def seeds(self) -> Tuple[int, int, int]:
+        return (
+            frag_seed(self.frag_id, self.epoch, _ROLE_COL, self.base_seed),
+            frag_seed(self.frag_id, self.epoch, _ROLE_SIGN, self.base_seed),
+            frag_seed(self.frag_id, self.epoch, _ROLE_SUB, self.base_seed),
+        )
+
+    @property
+    def width(self) -> int:
+        return int(self.counters.shape[-1])
+
+
+def level_seed_mix(seed: int, level: int) -> int:
+    """Per-UnivMon-level seed derivation (levels = independent CS rows)."""
+    return int((seed ^ (level * 0x9E3779B9)) & 0x7FFFFFFF)
+
+
+def packet_subepoch(ts: np.ndarray, epoch_start: int, log2_te: int,
+                    n: int) -> np.ndarray:
+    """Method 2 (§5): subepoch id = bit-slice T[log2(Te) : log2(Tf)] of the
+    *global* timestamp (epochs start at multiples of Te, so no subtraction
+    is needed — exactly the Fig. 11 substring extraction)."""
+    del epoch_start  # kept for signature clarity; Method 2 is epoch-agnostic
+    shift = log2_te - int(np.log2(n))
+    return ((np.asarray(ts, dtype=np.int64) >> shift) & (n - 1)).astype(
+        np.int32)
+
+
+def monitored_mask(keys: np.ndarray, sub_pkt: np.ndarray, sub_seed: int,
+                   n: int, single_hop: Optional[np.ndarray],
+                   mitigation: bool) -> Tuple[np.ndarray, np.ndarray]:
+    """Which packets this fragment monitors, per §4.1 (+§4.4).
+
+    Returns (mask, flow_subepoch).
+    """
+    sub_flow = H.hash_pow2(np.asarray(keys, dtype=np.uint32), sub_seed, n)
+    mask = sub_pkt == sub_flow
+    if mitigation and n >= 2 and single_hop is not None:
+        sub2 = (sub_flow + n // 2) & (n - 1)
+        mask = mask | (single_hop & (sub_pkt == sub2))
+    return mask, sub_flow
+
+
+def process_epoch(cfg: FragmentConfig, epoch: int, n: int,
+                  keys: np.ndarray, values: np.ndarray, ts: np.ndarray,
+                  epoch_start: int, log2_te: int,
+                  single_hop: Optional[np.ndarray] = None) -> EpochRecords:
+    """Run one epoch of online sketching for one fragment (numpy backend).
+
+    Produces the fragment's full set of subepoch records.
+    """
+    w = cfg.width
+    keys = np.asarray(keys, dtype=np.uint32)
+    values = np.asarray(values, dtype=np.int64)
+    col_seed, sign_seed, sub_seed = (
+        frag_seed(cfg.frag_id, epoch, _ROLE_COL, cfg.base_seed),
+        frag_seed(cfg.frag_id, epoch, _ROLE_SIGN, cfg.base_seed),
+        frag_seed(cfg.frag_id, epoch, _ROLE_SUB, cfg.base_seed),
+    )
+    sub_pkt = packet_subepoch(ts, epoch_start, log2_te, n)
+    mask, _ = monitored_mask(keys, sub_pkt, sub_seed, n, single_hop,
+                             cfg.mitigation)
+
+    k, v, s = keys[mask], values[mask], sub_pkt[mask]
+    if cfg.kind == "um":
+        # Each level is an independent Count Sketch row (own column/sign
+        # hashes) sharing the fragment's subepoch hash, per §4.2.
+        lvl = H.level_of(k, cfg.level_seed, cfg.n_levels)
+        counters = np.zeros((cfg.n_levels, n, w), dtype=np.int64)
+        for l in range(cfg.n_levels):
+            m = lvl >= l
+            if not m.any():
+                continue
+            col_l = H.hash_mod(k[m], level_seed_mix(col_seed, l), w)
+            sgn_l = H.hash_sign(k[m], level_seed_mix(sign_seed, l))
+            flat = s[m].astype(np.int64) * w + col_l
+            counters[l] = np.bincount(
+                flat, weights=(v[m] * sgn_l).astype(np.float64),
+                minlength=n * w).astype(np.int64).reshape(n, w)
+    else:
+        col = H.hash_mod(k, col_seed, w)
+        if cfg.kind == "cs":
+            v = v * H.hash_sign(k, sign_seed).astype(np.int64)
+        flat = s.astype(np.int64) * w + col
+        counters = np.bincount(flat, weights=v.astype(np.float64),
+                               minlength=n * w).astype(np.int64).reshape(n, w)
+
+    return EpochRecords(cfg.frag_id, epoch, n, counters, cfg.kind,
+                        cfg.mitigation, cfg.base_seed)
+
+
+# ---------------------------------------------------------------------------
+# §5 "no-reset" export: cumulative counters + delta records
+# ---------------------------------------------------------------------------
+
+
+class CumulativeFragment:
+    """The paper's §5 memory-efficient export mode: counters are *not*
+    reset at subepoch boundaries; the controller reconstructs each
+    subepoch record as the delta between consecutive cumulative exports.
+
+    This avoids the double-buffered two-sketch deployment [74] — only one
+    counter array lives in SRAM — at the cost of shipping cumulative
+    snapshots.  ``export_epoch`` proves the equivalence: the deltas are
+    exactly the reset-mode ``EpochRecords`` (tested in
+    tests/test_fragment.py::test_delta_export_equals_reset).
+    """
+
+    def __init__(self, cfg: FragmentConfig):
+        self.cfg = cfg
+        self._cum: Optional[np.ndarray] = None
+
+    def export_epoch(self, epoch: int, n: int, keys, values, ts,
+                     epoch_start: int, log2_te: int,
+                     single_hop=None) -> EpochRecords:
+        """Process one epoch WITHOUT resetting; return delta records."""
+        rec = process_epoch(self.cfg, epoch, n, keys, values, ts,
+                            epoch_start, log2_te, single_hop=single_hop)
+        # cumulative view: running sum of all subepoch exports so far
+        flat = rec.counters.reshape(-1, rec.counters.shape[-1])
+        if self._cum is None or self._cum.shape != flat[0].shape:
+            self._cum = np.zeros_like(flat[0])
+        cum_snapshots = np.cumsum(flat, axis=0) + self._cum
+        self._cum = cum_snapshots[-1].copy()
+        # controller-side delta reconstruction
+        deltas = np.diff(np.concatenate(
+            [(cum_snapshots[0] - flat[0])[None], cum_snapshots], axis=0),
+            axis=0)
+        return EpochRecords(rec.frag_id, rec.epoch, rec.n,
+                            deltas.reshape(rec.counters.shape), rec.kind,
+                            rec.mitigation, rec.base_seed)

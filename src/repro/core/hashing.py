@@ -1,0 +1,97 @@
+"""Universal hash families used by all sketches.
+
+The paper assumes hardware CRC hash units on PISA switches.  On TPU we use
+multiply-shift / avalanche mixing in uint32 arithmetic, which is VPU-friendly
+(integer multiply + shifts + xors) and gives the same 2-universal guarantee
+class required by the Count-Min / Count Sketch analyses (Eq. 1-2 of the
+paper).
+
+All functions work identically under numpy and jax.numpy: unsigned-integer
+overflow is well-defined wraparound in both.  ``xp`` selects the backend.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# Distinct odd constants for the avalanche mixer (splitmix32 finalizer).
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+# Large odd multiplier for seeding (Knuth).
+_SEED_MULT = np.uint32(2654435769)  # floor(2^32 / golden_ratio)
+
+
+def mix32(x, xp=np):
+    """Avalanche-mix a uint32 array (splitmix32 finalizer)."""
+    x = xp.asarray(x).astype(xp.uint32)
+    x = (x ^ (x >> xp.uint32(16))) * _M1
+    x = (x ^ (x >> xp.uint32(15))) * _M2
+    x = x ^ (x >> xp.uint32(16))
+    return x
+
+
+def hash_u32(keys, seed, xp=np):
+    """2-universal-style hash of ``keys`` (uint32) under ``seed`` -> uint32."""
+    keys = xp.asarray(keys).astype(xp.uint32)
+    seed = xp.uint32(seed)
+    return mix32(keys * _SEED_MULT + seed, xp=xp)
+
+
+def hash_mod(keys, seed, mod, xp=np):
+    """Hash of ``keys`` into ``[0, mod)``.  ``mod`` need not be a power of 2.
+
+    Uses Lemire's fast-range reduction ((h * mod) >> 32) computed in two
+    16-bit halves so that everything stays in uint32 (no uint64 requirement
+    on TPU): unbiased enough for sketching (bias < 2^-16).
+    """
+    h = hash_u32(keys, seed, xp=xp)
+    mod_u = xp.uint32(mod)
+    # (h * mod) >> 32 via 16-bit limbs: h = hi*2^16 + lo
+    hi = h >> xp.uint32(16)
+    lo = h & xp.uint32(0xFFFF)
+    # hi*mod >> 16  +  (lo*mod >> 32 ~ negligible carry term, keep it)
+    t = (hi * mod_u) + ((lo * mod_u) >> xp.uint32(16))
+    return (t >> xp.uint32(16)).astype(xp.int32)
+
+
+def hash_pow2(keys, seed, n, xp=np):
+    """Hash of ``keys`` into ``[0, n)`` for power-of-two ``n`` (subepochs)."""
+    h = hash_u32(keys, seed, xp=xp)
+    return (h & xp.uint32(n - 1)).astype(xp.int32)
+
+
+def hash_sign(keys, seed, xp=np):
+    """Count-Sketch sign hash: +1/-1 (int32)."""
+    h = hash_u32(keys, seed, xp=xp)
+    return (xp.int32(1) - xp.int32(2) * (h & xp.uint32(1)).astype(xp.int32))
+
+
+def hash_bits(keys, seed, nbits, xp=np):
+    """Return ``nbits`` independent sampling bits per key (UnivMon levels).
+
+    Bit ``l`` of the result decides whether a key survives level ``l``'s
+    subsampling.  A key belongs to level ``l`` iff bits ``0..l-1`` are all 1.
+    """
+    h = hash_u32(keys, seed, xp=xp)
+    # One avalanche gives 32 good bits; we need <= 16.
+    return h & xp.uint32((1 << nbits) - 1)
+
+
+def level_of(keys, seed, n_levels, xp=np):
+    """UnivMon level membership: deepest level each key belongs to.
+
+    Returns ``lvl`` in ``[0, n_levels)`` such that the key is present in
+    levels ``0..lvl`` (level 0 sees the full stream).
+    """
+    bits = hash_bits(keys, seed, n_levels - 1, xp=xp)
+    # Count trailing ones == index of first zero bit.
+    # ~bits has a 1 where bits had its first 0; isolate lowest set bit.
+    inv = (~bits) & xp.uint32((1 << (n_levels - 1)) - 1)
+    # Position of lowest set bit of inv (or n_levels-1 if inv == 0).
+    lowest = inv & (xp.uint32(0) - inv)  # two's complement trick
+    # log2 of a power of two via float exponent (exact for < 2^24).
+    lvl = xp.where(
+        inv == 0,
+        xp.int32(n_levels - 1),
+        xp.log2(xp.maximum(lowest.astype(xp.float64), 1.0)).astype(xp.int32),
+    )
+    return lvl.astype(xp.int32)

@@ -1,0 +1,218 @@
+"""Central querying (paper §4.3): composite sketches from subepoch records.
+
+Per epoch:
+  Step 1 — the caller retrieves the records of the fragments on the queried
+  flow's path (all flows in one call share a path).
+  Step 2 — every record is queried as a single-row sketch, its estimate is
+  split over ``N_R = n_m / n`` *normalized* subepochs, the per-normalized-
+  subepoch estimates are merged across fragments (min for CMS, median for
+  CS/UnivMon), temporal blind spots are filled with the mean of the observed
+  normalized subepochs, and the slot estimates are summed into the epoch
+  estimate.
+
+Everything is vectorized over the queried keys (numpy; this is the
+controller-side analysis plane, not the data plane).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from . import hashing as H
+from .fragment import EpochRecords, level_seed_mix
+
+
+def _raw_estimates(rec: EpochRecords, keys: np.ndarray,
+                   level: Optional[int]) -> np.ndarray:
+    """Query one record-set as single-row sketches: raw per-key estimates
+    from the subepoch each key was mapped to. Returns (n_keys,) plus the
+    flow→subepoch mapping."""
+    col_seed, sign_seed, _ = rec.seeds()
+    counters = rec.counters
+    if rec.kind == "um":
+        assert level is not None
+        counters = counters[level]
+        col_seed = level_seed_mix(col_seed, level)
+        sign_seed = level_seed_mix(sign_seed, level)
+    w = counters.shape[-1]
+    col = H.hash_mod(keys, col_seed, w)
+    signed = rec.kind in ("cs", "um")
+    sgn = H.hash_sign(keys, sign_seed).astype(np.float64) if signed else 1.0
+    return counters, col, sgn
+
+
+def _fill_layer(layer: np.ndarray, raw: np.ndarray, sub: np.ndarray,
+                n_r: int, sel: Optional[np.ndarray] = None) -> None:
+    """Spread raw estimates over their N_R normalized-subepoch slots."""
+    n_keys = layer.shape[0]
+    o = raw / n_r
+    rows = np.arange(n_keys)
+    cols = sub.astype(np.int64)[:, None] * n_r + np.arange(n_r)[None, :]
+    if sel is None:
+        layer[rows[:, None], cols] = o[:, None]
+    else:
+        layer[rows[sel][:, None], cols[sel]] = o[sel][:, None]
+
+
+def query_epoch(records: Sequence[EpochRecords], keys: np.ndarray,
+                kind: str, single_hop: Optional[np.ndarray] = None,
+                level: Optional[int] = None,
+                merge: str = "subepoch") -> np.ndarray:
+    """Epoch estimate for each key from the on-path fragments' records.
+
+    merge="subepoch": the Fig. 9 / §4.3 Step-2 procedure — normalize all
+    records into n_m subepoch slots, merge per slot (min/median), fill
+    temporal blind spots with the mean of covered slots, sum.
+
+    merge="fragment": the §4.2 "amplify success probability through
+    merging" reading — each fragment's record is scaled proportionally
+    (x n, §1) into an epoch-level estimate, then min/median is taken
+    ACROSS FRAGMENTS.  Keeps the full path-length merge robustness at the
+    cost of assuming within-epoch rate uniformity per fragment.
+    """
+    keys = np.asarray(keys, dtype=np.uint32)
+    n_keys = len(keys)
+    if n_keys == 0 or not records:
+        return np.zeros(n_keys)
+    if merge == "fragment":
+        return _query_epoch_fragment_merge(records, keys, kind, single_hop,
+                                           level)
+    n_m = max(r.n for r in records)
+
+    layers: List[np.ndarray] = []
+    for rec in records:
+        counters, col, sgn = _raw_estimates(rec, keys, level)
+        _, _, sub_seed = rec.seeds()
+        sub = H.hash_pow2(keys, sub_seed, rec.n)
+        n_r = n_m // rec.n
+        raw = counters[sub, col].astype(np.float64) * sgn
+        layer = np.full((n_keys, n_m), np.nan)
+        _fill_layer(layer, raw, sub, n_r)
+        layers.append(layer)
+        # §4.4 mitigation: single-hop flows carry a second subepoch record.
+        if rec.mitigation and rec.n >= 2 and single_hop is not None \
+                and single_hop.any():
+            sub2 = (sub + rec.n // 2) & (rec.n - 1)
+            raw2 = counters[sub2, col].astype(np.float64) * sgn
+            layer2 = np.full((n_keys, n_m), np.nan)
+            _fill_layer(layer2, raw2, sub2, n_r, sel=single_hop)
+            layers.append(layer2)
+
+    est = np.stack(layers)  # (n_layers, n_keys, n_m)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", category=RuntimeWarning)
+        if kind == "cms":
+            merged = np.nanmin(est, axis=0)
+        else:
+            merged = np.nanmedian(est, axis=0)
+        # Temporal blind spots: extrapolate from the mean of observed slots.
+        fill = np.nanmean(merged, axis=1, keepdims=True)
+    fill = np.where(np.isnan(fill), 0.0, fill)
+    merged = np.where(np.isnan(merged), fill, merged)
+    return merged.sum(axis=1)
+
+
+def _query_epoch_fragment_merge(records, keys, kind, single_hop, level):
+    ests = np.empty((len(records), len(keys)))
+    for i, rec in enumerate(records):
+        counters, col, sgn = _raw_estimates(rec, keys, level)
+        _, _, sub_seed = rec.seeds()
+        sub = H.hash_pow2(keys, sub_seed, rec.n)
+        raw = counters[sub, col].astype(np.float64) * sgn
+        if rec.mitigation and rec.n >= 2 and single_hop is not None \
+                and single_hop.any():
+            sub2 = (sub + rec.n // 2) & (rec.n - 1)
+            raw2 = counters[sub2, col].astype(np.float64) * sgn
+            raw = np.where(single_hop, (raw + raw2) / 2.0, raw)
+        ests[i] = raw * rec.n  # proportional scaling to the epoch (§1)
+    if kind == "cms":
+        return ests.min(axis=0)
+    return np.median(ests, axis=0)
+
+
+def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],
+                 keys: np.ndarray, kind: str,
+                 single_hop: Optional[np.ndarray] = None,
+                 level: Optional[int] = None,
+                 merge: str = "subepoch",
+                 chunk: int = 16384) -> np.ndarray:
+    """Sum of per-epoch estimates over a query window (O_Q = Sum(O))."""
+    keys = np.asarray(keys, dtype=np.uint32)
+    out = np.zeros(len(keys))
+    for start in range(0, len(keys), chunk):
+        sl = slice(start, start + chunk)
+        sh = single_hop[sl] if single_hop is not None else None
+        for records in records_by_epoch:
+            if records:
+                out[sl] += query_epoch(records, keys[sl], kind,
+                                       single_hop=sh, level=level,
+                                       merge=merge)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# UnivMon network-wide G-sum / entropy over composite sketches (§6.2)
+# ---------------------------------------------------------------------------
+
+
+def um_gsum_window(records_by_epoch_per_path, keys_per_path, g,
+                   n_levels: int, level_seed: int,
+                   k_heavy: int = 1024) -> float:
+    """Recursive UnivMon estimator over disaggregated composite sketches.
+
+    ``records_by_epoch_per_path``: list (one entry per path-group) of
+    per-epoch record lists; ``keys_per_path``: the candidate keys of each
+    group.  Per-level window frequencies are estimated with the standard
+    composite query, then combined with the UnivMon Y-recursion.
+    """
+    # Estimate per-level window frequency for every candidate key.
+    all_keys, all_lvl, est_per_level = [], [], []
+    for keys, recs_by_epoch in zip(keys_per_path, records_by_epoch_per_path):
+        keys = np.asarray(keys, dtype=np.uint32)
+        if len(keys) == 0:
+            continue
+        lvl = H.level_of(keys, level_seed, n_levels)
+        ests = np.zeros((n_levels, len(keys)))
+        for l in range(n_levels):
+            m = lvl >= l
+            if not m.any():
+                continue
+            ests[l, m] = query_window(recs_by_epoch, keys[m], "um", level=l)
+        all_keys.append(keys)
+        all_lvl.append(lvl)
+        est_per_level.append(ests)
+    if not all_keys:
+        return 0.0
+    keys = np.concatenate(all_keys)
+    lvl = np.concatenate(all_lvl)
+    ests = np.concatenate(est_per_level, axis=1)
+
+    y = 0.0
+    for l in range(n_levels - 1, -1, -1):
+        sel = lvl >= l
+        if not sel.any():
+            y = 2.0 * y
+            continue
+        est = np.maximum(ests[l, sel], 1.0)
+        order = np.argsort(-est)[:k_heavy]
+        hh_est = est[order]
+        in_next = (lvl[sel][order] >= (l + 1)).astype(np.float64)
+        if l == n_levels - 1:
+            y = float(np.sum(g(hh_est)))
+        else:
+            y = 2.0 * y + float(np.sum((1.0 - 2.0 * in_next) * g(hh_est)))
+    return y
+
+
+def um_entropy_window(records_by_epoch_per_path, keys_per_path,
+                      n_levels: int, level_seed: int, total: float,
+                      k_heavy: int = 1024) -> float:
+    """Empirical entropy in bits over the query window."""
+    s = um_gsum_window(records_by_epoch_per_path, keys_per_path,
+                       lambda x: x * np.log2(np.maximum(x, 1.0)),
+                       n_levels, level_seed, k_heavy=k_heavy)
+    if total <= 0:
+        return 0.0
+    return float(np.log2(total) - s / total)

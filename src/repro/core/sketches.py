@@ -1,0 +1,162 @@
+"""Aggregated (single-node) sketches: Count-Min, Count Sketch, UnivMon.
+
+These are the classical matrix-of-counters structures the paper
+disaggregates, used (a) as the "aggregated" evaluation baseline (§6), and
+(b) as the pure-jnp oracle for the Pallas ``sketch_update`` kernel.
+
+All structures are functional: ``update`` returns new counter arrays.
+Counters are int64 on host (numpy) to avoid overflow concerns in long
+epochs; the Pallas kernel path uses int32 per-subepoch counters (bounded by
+subepoch volume), matching switch SRAM cell widths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+import numpy as np
+
+from . import hashing as H
+
+
+@dataclass(frozen=True)
+class SketchSpec:
+    """Shape/seed specification for a matrix sketch."""
+
+    kind: str  # "cms" | "cs"
+    depth: int
+    width: int
+    seed: int = 0
+
+    def row_seeds(self) -> np.ndarray:
+        rng = np.random.RandomState(self.seed)
+        return rng.randint(0, 2**31 - 1, size=(self.depth, 2), dtype=np.int64)
+
+
+def make_counters(spec: SketchSpec) -> np.ndarray:
+    return np.zeros((spec.depth, spec.width), dtype=np.int64)
+
+
+def update(spec: SketchSpec, counters: np.ndarray, keys: np.ndarray,
+           values: np.ndarray) -> np.ndarray:
+    """Insert a batch of (key, value) pairs. Returns new counters."""
+    seeds = spec.row_seeds()
+    out = counters.copy()
+    keys = np.asarray(keys, dtype=np.uint32)
+    values = np.asarray(values, dtype=np.int64)
+    for r in range(spec.depth):
+        col = H.hash_mod(keys, seeds[r, 0], spec.width)
+        if spec.kind == "cs":
+            sgn = H.hash_sign(keys, seeds[r, 1]).astype(np.int64)
+            np.add.at(out[r], col, values * sgn)
+        else:
+            np.add.at(out[r], col, values)
+    return out
+
+
+def query(spec: SketchSpec, counters: np.ndarray, keys: np.ndarray) -> np.ndarray:
+    """Point-query frequency estimates for ``keys``."""
+    seeds = spec.row_seeds()
+    keys = np.asarray(keys, dtype=np.uint32)
+    ests = np.empty((spec.depth, len(keys)), dtype=np.float64)
+    for r in range(spec.depth):
+        col = H.hash_mod(keys, seeds[r, 0], spec.width)
+        raw = counters[r, col].astype(np.float64)
+        if spec.kind == "cs":
+            raw = raw * H.hash_sign(keys, seeds[r, 1]).astype(np.float64)
+        ests[r] = raw
+    if spec.kind == "cms":
+        return ests.min(axis=0)
+    return np.median(ests, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# UnivMon (Liu et al., SIGCOMM'16): a stack of Count Sketch "levels", level l
+# seeing a 2^-l subsample of the stream.  Supports G-sum queries (entropy,
+# F2, ...) via the recursive estimator.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class UnivMonSpec:
+    depth: int
+    width: int          # width of every level (same width, as in the paper)
+    n_levels: int = 16  # ~log2(#flows), per the paper's footnote 5
+    seed: int = 0
+    level_seed: int = 7777  # NETWORK-WIDE seed: level membership must agree
+    #                         across fragments for composite querying.
+
+    def level_spec(self, lvl: int) -> SketchSpec:
+        return SketchSpec("cs", self.depth, self.width, seed=self.seed * 131 + lvl)
+
+
+def um_make_counters(spec: UnivMonSpec) -> np.ndarray:
+    return np.zeros((spec.n_levels, spec.depth, spec.width), dtype=np.int64)
+
+
+def um_update(spec: UnivMonSpec, counters: np.ndarray, keys: np.ndarray,
+              values: np.ndarray) -> np.ndarray:
+    out = counters.copy()
+    lvl = H.level_of(np.asarray(keys, dtype=np.uint32), spec.level_seed,
+                     spec.n_levels)
+    for l in range(spec.n_levels):
+        m = lvl >= l
+        if not m.any():
+            continue
+        out[l] = update(spec.level_spec(l), out[l], np.asarray(keys)[m],
+                        np.asarray(values)[m])
+    return out
+
+
+def um_query_freq(spec: UnivMonSpec, counters: np.ndarray,
+                  keys: np.ndarray) -> np.ndarray:
+    """Frequency estimate from level 0 (sees the full stream)."""
+    return query(spec.level_spec(0), counters[0], keys)
+
+
+def um_gsum(spec: UnivMonSpec, counters: np.ndarray, candidate_keys: np.ndarray,
+            g, k_heavy: int = 1024) -> float:
+    """Recursive UnivMon G-sum estimator over the level stack.
+
+    ``candidate_keys`` is the query key universe (in simulation, all observed
+    flow keys; a deployment would carry per-level heavy-hitter heaps).
+    ``g`` maps estimated frequency -> contribution (e.g. x*log2(x)).
+    """
+    keys = np.asarray(candidate_keys, dtype=np.uint32)
+    lvl = H.level_of(keys, spec.level_seed, spec.n_levels)
+    y = 0.0
+    for l in range(spec.n_levels - 1, -1, -1):
+        sel = lvl >= l
+        if not sel.any():
+            y = 2.0 * y
+            continue
+        k_l = keys[sel]
+        est = query(spec.level_spec(l), counters[l], k_l)
+        est = np.maximum(est, 1.0)
+        order = np.argsort(-est)[:k_heavy]
+        hh_keys, hh_est = k_l[order], est[order]
+        in_next = (lvl[sel][order] >= (l + 1)).astype(np.float64)
+        if l == spec.n_levels - 1:
+            y = float(np.sum(g(hh_est)))
+        else:
+            y = 2.0 * y + float(np.sum((1.0 - 2.0 * in_next) * g(hh_est)))
+    return y
+
+
+def um_entropy(spec: UnivMonSpec, counters: np.ndarray,
+               candidate_keys: np.ndarray, total: float,
+               k_heavy: int = 1024) -> float:
+    """Empirical entropy (bits): log2(m) - (1/m) * sum f_i log2 f_i."""
+    s = um_gsum(spec, counters, candidate_keys,
+                lambda x: x * np.log2(np.maximum(x, 1.0)), k_heavy=k_heavy)
+    if total <= 0:
+        return 0.0
+    return float(np.log2(total) - s / total)
+
+
+def true_entropy(sizes: np.ndarray) -> float:
+    sizes = np.asarray(sizes, dtype=np.float64)
+    sizes = sizes[sizes > 0]
+    m = sizes.sum()
+    p = sizes / m
+    return float(-(p * np.log2(p)).sum())

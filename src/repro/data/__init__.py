@@ -1,0 +1,5 @@
+from .pipeline import (SyntheticLM, ShardedTokenFiles, make_batch_iterator,
+                       batch_specs)
+
+__all__ = ["SyntheticLM", "ShardedTokenFiles", "make_batch_iterator",
+           "batch_specs"]

@@ -1,0 +1,4 @@
+from .ops import sketch_update
+from .ref import sketch_update_ref
+
+__all__ = ["sketch_update", "sketch_update_ref"]

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: batched sketch-fragment update (the data-plane hot path).
+
+The PISA switch updates one SRAM counter per packet.  A TPU has no cheap
+scatter; the TPU-native recast is a *one-hot matmul histogram* on the MXU:
+
+    contribution[s, c] = sum_p onehot_sub[s, p] * (value*sign*mask)[p]
+                                 * onehot_col[p, c]
+
+i.e. a (n_sub x BLK) @ (BLK x W_BLK) matmul per packet block, accumulated
+into a VMEM-resident (n_sub, width)-tile of the fragment counters.  All
+hashing (column, sign, subepoch of both packet and flow) happens in-kernel
+in uint32 arithmetic (VPU), so the only HBM traffic is the packet stream in
+and the counters out.
+
+Grid: (width_blocks, packet_blocks); the packet axis is the inner
+(sequential) reduction axis, so each counter tile is initialized once and
+revisited across packet blocks.
+
+VMEM budget per step: keys/vals/ts blocks (3 * BLK * 4B) + one-hot
+(BLK * W_BLK * 4B) + counters tile (N_SUB * W_BLK * 4B).  Defaults
+(BLK=1024, W_BLK=2048, n_sub<=16) ~ 8.5 MB + 0.13 MB < 16 MB VMEM.
+Matmul dims are multiples of (8,128): BLK and W_BLK both 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Avalanche constants (must match repro.core.hashing).
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+_SEED_MULT = np.uint32(2654435769)
+
+
+def _mix32(x):
+    x = (x ^ (x >> np.uint32(16))) * _M1
+    x = (x ^ (x >> np.uint32(15))) * _M2
+    return x ^ (x >> np.uint32(16))
+
+
+def _hash_u32(keys, seed):
+    return _mix32(keys * _SEED_MULT + seed)
+
+
+def _hash_mod(keys, seed, mod):
+    """Lemire-style fast-range in two 16-bit limbs (matches hashing.py)."""
+    h = _hash_u32(keys, seed)
+    mod_u = np.uint32(mod)
+    hi = h >> np.uint32(16)
+    lo = h & np.uint32(0xFFFF)
+    t = hi * mod_u + ((lo * mod_u) >> np.uint32(16))
+    return (t >> np.uint32(16)).astype(jnp.int32)
+
+
+def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
+                         hash_width: int, w_blk: int, n_sub: int,
+                         log2_te: int, col_seed: int, sign_seed: int,
+                         sub_seed: int, signed: bool):
+    wi = pl.program_id(0)   # width-block index
+    pj = pl.program_id(1)   # packet-block index (sequential reduction)
+
+    @pl.when(pj == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    keys = keys_ref[...].astype(np.uint32)          # (BLK,)
+    vals = vals_ref[...].astype(jnp.float32)         # (BLK,)
+    ts = ts_ref[...].astype(np.uint32)              # (BLK,)
+    blk = keys.shape[0]
+
+    # Subepoch of the packet: Method 2 bit-slice of the timestamp.
+    shift = np.uint32(log2_te - (n_sub.bit_length() - 1))
+    sub_pkt = ((ts >> shift) & np.uint32(n_sub - 1)).astype(jnp.int32)
+    # Subepoch the flow is monitored in (temporal sampling, §4.1).
+    sub_flow = (_hash_u32(keys, np.uint32(sub_seed))
+                & np.uint32(n_sub - 1)).astype(jnp.int32)
+    monitored = (sub_pkt == sub_flow).astype(jnp.float32)
+
+    col = _hash_mod(keys, np.uint32(col_seed), hash_width)  # (BLK,) int32
+    if signed:
+        sgn = (jnp.float32(1.0) - 2.0 * (_hash_u32(keys, np.uint32(sign_seed))
+                                         & np.uint32(1)).astype(jnp.float32))
+        vals = vals * sgn
+    vals = vals * monitored
+
+    # One-hot over this width block: (BLK, W_BLK) in f32 for the MXU.
+    local_col = col - wi * w_blk
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, w_blk), 1)
+    onehot_col = (local_col[:, None] == col_iota).astype(jnp.float32)
+    # One-hot over subepochs: (N_SUB, BLK).
+    sub_iota = jax.lax.broadcasted_iota(jnp.int32, (n_sub, blk), 0)
+    onehot_sub = (sub_pkt[None, :] == sub_iota).astype(jnp.float32)
+
+    # (N_SUB, BLK) @ (BLK, W_BLK) -> (N_SUB, W_BLK) on the MXU.
+    contrib = jax.lax.dot(onehot_sub * vals[None, :], onehot_col,
+                          precision=jax.lax.Precision.HIGHEST)
+    out_ref[...] += contrib
+
+
+def sketch_update_pallas(keys, vals, ts, *, hash_width: int,
+                         padded_width: int, n_sub: int,
+                         log2_te: int, col_seed: int, sign_seed: int,
+                         sub_seed: int, signed: bool, blk: int = 1024,
+                         w_blk: int = 2048, interpret: bool = False):
+    """Lowered pallas_call.  Inputs must be padded to a multiple of blk;
+    padded_width a multiple of w_blk (ops.py handles padding).  Columns are
+    hashed modulo the *true* hash_width <= padded_width."""
+    p = keys.shape[0]
+    assert p % blk == 0 and padded_width % w_blk == 0
+    grid = (padded_width // w_blk, p // blk)
+    kernel = functools.partial(
+        sketch_update_kernel, hash_width=hash_width, w_blk=w_blk,
+        n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
+        sign_seed=sign_seed, sub_seed=sub_seed, signed=signed)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i, j: (j,)),
+            pl.BlockSpec((blk,), lambda i, j: (j,)),
+            pl.BlockSpec((blk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((n_sub, w_blk), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_sub, padded_width), jnp.float32),
+        interpret=interpret,
+    )(keys, vals, ts)

@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the sketch_update kernel: padding + dispatch.
+
+On CPU (this container) the Pallas body runs in interpret mode; on TPU the
+same call lowers to Mosaic.  ``backend="ref"`` selects the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import sketch_update_pallas
+from .ref import sketch_update_ref
+
+
+def _pad_to(x, m):
+    p = (-x.shape[0]) % m
+    if p == 0:
+        return x
+    return jnp.pad(x, (0, p))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "width", "n_sub", "log2_te", "col_seed", "sign_seed", "sub_seed",
+    "signed", "backend", "blk", "w_blk", "interpret"))
+def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
+                  col_seed: int, sign_seed: int, sub_seed: int,
+                  signed: bool = True, backend: str = "pallas",
+                  blk: int = 1024, w_blk: int = 2048,
+                  interpret: bool = True):
+    """Compute all subepoch-record counters for one fragment epoch.
+
+    Returns (n_sub, width) float32 counters (exact integers < 2^24).
+    Padding keys with value 0 contributes nothing (one-hot x 0 = 0).
+    """
+    if backend == "ref":
+        return sketch_update_ref(
+            keys, vals, ts, width=width, n_sub=n_sub, log2_te=log2_te,
+            col_seed=col_seed, sign_seed=sign_seed, sub_seed=sub_seed,
+            signed=signed)
+    keys = _pad_to(keys.astype(jnp.uint32), blk)
+    vals = _pad_to(vals.astype(jnp.float32), blk)
+    ts = _pad_to(ts.astype(jnp.uint32), blk)
+    w_blk = min(w_blk, int(2 ** np.ceil(np.log2(max(width, 128)))))
+    pad_w = (-width) % w_blk
+    out = sketch_update_pallas(
+        keys, vals, ts, hash_width=width, padded_width=width + pad_w,
+        n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
+        sign_seed=sign_seed, sub_seed=sub_seed, signed=signed, blk=blk,
+        w_blk=w_blk, interpret=interpret)
+    return out[:, :width]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the sketch_update kernel (scatter-add semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import _hash_mod, _hash_u32
+
+
+def sketch_update_ref(keys, vals, ts, *, width: int, n_sub: int,
+                      log2_te: int, col_seed: int, sign_seed: int,
+                      sub_seed: int, signed: bool):
+    keys = keys.astype(jnp.uint32)
+    vals = vals.astype(jnp.float32)
+    ts = ts.astype(jnp.uint32)
+    shift = jnp.uint32(log2_te - (n_sub.bit_length() - 1))
+    sub_pkt = ((ts >> shift) & jnp.uint32(n_sub - 1)).astype(jnp.int32)
+    sub_flow = (_hash_u32(keys, jnp.uint32(sub_seed))
+                & jnp.uint32(n_sub - 1)).astype(jnp.int32)
+    monitored = (sub_pkt == sub_flow).astype(jnp.float32)
+    col = _hash_mod(keys, jnp.uint32(col_seed), width)
+    if signed:
+        sgn = (jnp.float32(1.0) - 2.0 * (_hash_u32(keys, jnp.uint32(sign_seed))
+                                         & jnp.uint32(1)).astype(jnp.float32))
+        vals = vals * sgn
+    vals = vals * monitored
+    out = jnp.zeros((n_sub, width), jnp.float32)
+    return out.at[sub_pkt, col].add(vals)

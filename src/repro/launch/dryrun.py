@@ -1,0 +1,389 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   512 host devices cover both the single-pod (16x16=256) and the
+#   multi-pod (2x16x16=512) production meshes.  This env var is set ONLY
+#   here (never in conftest/pyproject) so tests/benches see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions every op),
+  * the per-device memory fits (memory_analysis / analytical fallback),
+  * and it yields the roofline terms (cost_analysis FLOPs/bytes +
+    collective bytes parsed from the post-SPMD HLO).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k \
+      --mesh multi --out artifacts/dryrun
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs N]
+
+``--all`` drives one subprocess per cell (isolates XLA state & failures;
+compilations run in parallel).  Per-cell JSON artifacts land in --out and
+are consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, LONG_CONTEXT_OK, get_config, list_configs
+from ..data.pipeline import batch_specs
+from ..models import model as MDL
+from ..models.sharding import sharding_env
+from . import shardings as SH
+from .mesh import make_production_mesh
+
+# TPU v5e hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"((?:f|bf|s|u|pred)[0-9]{1,2}|token)"       # result dtype
+    r"((?:\[[0-9,]*\])+)"                        # result shape(s)
+    r"[^=]*\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.MULTILINE)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8": 1, "token": 0}
+
+
+def collective_bytes(hlo_text: str, top_k: int = 12):
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Returns (per-kind totals, top-k largest individual collectives with
+    shapes — the §Perf iteration reads this to find what to attack).
+    """
+    out: Dict[str, int] = {}
+    items = []
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, shapes, kind = m.group(1), m.group(2), m.group(3)
+        if m.group(0).lstrip().startswith(("all-gather-done",
+                                           "all-reduce-done")):
+            continue
+        nbytes = 0
+        for shp in re.findall(r"\[([0-9,]*)\]", shapes):
+            dims = [int(x) for x in shp.split(",") if x] or [1]
+            nbytes += int(np.prod(dims)) * _DTYPE_BYTES.get(dtype, 4)
+        out[kind] = out.get(kind, 0) + nbytes
+        items.append((nbytes, f"{kind} {dtype}{shapes}"))
+    items.sort(key=lambda t: -t[0])
+    agg: Dict[str, Any] = {}
+    for nb, desc in items:
+        if desc in agg:
+            agg[desc]["count"] += 1
+            agg[desc]["bytes"] += nb
+        else:
+            agg[desc] = {"count": 1, "bytes": nb}
+    top = sorted(agg.items(), key=lambda kv: -kv[1]["bytes"])[:top_k]
+    return out, [{"op": k, **v} for k, v in top]
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return batch_specs(cfg, shape)
+    # decode: one new token against a cache of seq_len
+    b = shape.global_batch
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    return {"tokens": tok}
+
+
+def _abstract_params(cfg, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: MDL.init_params(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def _abstract_decode_state(cfg, batch, max_len):
+    return jax.eval_shape(
+        lambda: MDL.init_decode_state(None, cfg, batch, max_len))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               fsdp: Optional[bool] = None, remat: bool = True,
+               sp: bool = True):
+    """Lower one (arch, shape) cell on ``mesh``.  Returns jax.stages.Lowered.
+
+    ``fsdp`` default: on for train (bf16 params + f32 moments need the
+    data axis to fit), OFF for prefill/decode (no optimizer state; FSDP
+    at serve time all-gathers weights every step — pure overhead).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if fsdp is None:
+        fsdp = shape.kind == "train"
+    params_ab = _abstract_params(cfg)
+    pspecs = SH.param_specs(params_ab, cfg, mesh, fsdp=fsdp)
+    psh = SH.tree_shardings(pspecs, mesh)
+    batch_ab = input_specs(arch, shape_name)
+
+    if shape.kind == "train":
+        from ..train.optimizer import OptState
+        from ..train.train_step import TrainState, make_train_step
+        from ..train.optimizer import cosine_schedule
+        opt_ab = jax.eval_shape(
+            lambda p: __import__("repro.train.optimizer",
+                                 fromlist=["adamw_init"]).adamw_init(p),
+            params_ab)
+        opt_sh = OptState(m=psh, v=psh,
+                          step=NamedSharding(mesh, P()))
+        state_sh = TrainState(params=psh, opt=opt_sh, comp=(),
+                              step=NamedSharding(mesh, P()))
+        state_ab = TrainState(params=params_ab, opt=opt_ab, comp=(),
+                              step=jax.ShapeDtypeStruct((), jnp.int32))
+        batch_sh = SH.batch_shardings(batch_ab, mesh)
+        step_fn = make_train_step(cfg, cosine_schedule(3e-4, 100, 10000),
+                                  remat=remat, sp=sp)
+        with sharding_env(mesh):
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+            ).lower(state_ab, batch_ab)
+        return lowered
+
+    if shape.kind == "prefill":
+        from ..serve.decode import make_prefill_step
+        b, s = shape.global_batch, shape.seq_len
+        st_specs = SH.decode_state_specs(cfg, b, mesh)
+        st_sh = SH.tree_shardings(st_specs, mesh)
+        batch_sh = SH.batch_shardings(batch_ab, mesh)
+        prefill_fn = make_prefill_step(cfg, max_len=s)
+
+        def fn(params, tokens):
+            return prefill_fn(params, tokens)
+
+        with sharding_env(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(psh, batch_sh["tokens"]),
+                out_shardings=(None, st_sh),
+            ).lower(params_ab, batch_ab["tokens"])
+        return lowered
+
+    # decode
+    from ..serve.decode import make_serve_step
+    b, s = shape.global_batch, shape.seq_len
+    seq_shard = shape_name.startswith("long")
+    st_specs = SH.decode_state_specs(cfg, b, mesh, seq_shard=seq_shard)
+    st_sh = SH.tree_shardings(st_specs, mesh)
+    state_ab = _abstract_decode_state(cfg, b, s)
+    tok_ab = batch_ab["tokens"]
+    tok_sh = NamedSharding(
+        mesh, SH.div_spec(mesh, tuple(tok_ab.shape),
+                          P(SH.BATCH, *([None] * (len(tok_ab.shape)
+                                                  - 1)))))
+    serve_fn = make_serve_step(cfg)
+    with sharding_env(mesh):
+        lowered = jax.jit(
+            serve_fn, in_shardings=(psh, tok_sh, st_sh),
+            out_shardings=(None, None, st_sh),
+        ).lower(params_ab, tok_ab, state_ab)
+    return lowered
+
+
+def analyze(lowered, compiled, mesh) -> Dict[str, Any]:
+    """Roofline terms + memory from a compiled cell."""
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    # bytes accessed: prefer explicit key; fall back to summing operands
+    hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_info = {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll, coll_top = collective_bytes(hlo)
+    coll_total = sum(coll.values())
+    # cost_analysis() of a compiled SPMD module reports PER-DEVICE numbers
+    # (the module is the per-partition program) — verified empirically:
+    # a (1024,1024,1024) matmul sharded 4 ways reports 2*1024^3/4 flops.
+    # Collective result shapes in the partitioned HLO are also per-device.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_total / ICI_BW
+    return {
+        "n_devices": n_dev,
+        "hlo_flops": flops,
+        "hlo_bytes": hbm_bytes,
+        "collective_bytes": coll,
+        "collective_top_ops": coll_top,
+        "collective_bytes_total": coll_total,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": max(
+            [("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)], key=lambda kv: kv[1])[0],
+        "memory_analysis": mem_info,
+        "hlo_n_ops": hlo.count("\n"),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: Optional[str] = None, *, fsdp=None, remat=True,
+             sp=True, attn_opt=False, moe_impl="gspmd",
+             tag: str = "") -> Dict[str, Any]:
+    from ..models import layers as LY
+    from ..models import moe as MOE
+    LY.set_attn_opt(attn_opt)
+    MOE.set_impl(moe_impl)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind,
+                           "mesh_shape": list(np.asarray(
+                               [mesh.shape[a] for a in mesh.axis_names])),
+                           "config": {"fsdp": fsdp, "remat": remat,
+                                      "sp": sp, "attn_opt": attn_opt,
+                                      "moe_impl": moe_impl}}
+    try:
+        lowered = lower_cell(arch, shape_name, mesh, fsdp=fsdp,
+                             remat=remat, sp=sp)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        rec.update(analyze(lowered, compiled, mesh))
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        n = cfg.n_params()
+        n_active = cfg.n_active_params()
+        if shape.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+            rec["model_flops"] = 6.0 * n_active * tokens
+        else:
+            tokens = shape.global_batch * (
+                shape.seq_len if shape.kind == "prefill" else 1)
+            rec["model_flops"] = 2.0 * n_active * tokens
+        rec["n_params"] = n
+        rec["n_active_params"] = n_active
+        if rec["hlo_flops"]:
+            # hlo_flops is per-device; model_flops is global
+            rec["useful_flops_frac"] = rec["model_flops"] / (
+                rec["hlo_flops"] * rec["n_devices"])
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = time.time() - t0
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = os.path.join(out_dir,
+                          f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def cells(mesh_kinds) -> list:
+    out = []
+    for arch in list_configs():
+        cfg = get_config(arch)
+        for shape_name in SHAPES:
+            if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+                continue  # pure full-attention archs skip 512k decode
+            for mk in mesh_kinds:
+                out.append((arch, shape_name, mk))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-sp", action="store_true")
+    ap.add_argument("--attn-opt", action="store_true",
+                    help="optimized serve-attention sharding (see §Perf)")
+    ap.add_argument("--moe-impl", default="gspmd", choices=["gspmd", "ep"])
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        todo = cells(mesh_kinds)
+        print(f"dry-run: {len(todo)} cells, {args.jobs} workers")
+        procs: list = []
+        results = []
+        while todo or procs:
+            while todo and len(procs) < args.jobs:
+                arch, shape, mk = todo.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mk,
+                       "--out", args.out]
+                procs.append(((arch, shape, mk),
+                              subprocess.Popen(cmd)))
+            for item in list(procs):
+                (arch, shape, mk), p = item
+                if p.poll() is not None:
+                    procs.remove(item)
+                    results.append(((arch, shape, mk), p.returncode))
+                    print(f"  [{len(results)}] {arch} x {shape} x {mk}: "
+                          f"rc={p.returncode}", flush=True)
+            time.sleep(0.5)
+        bad = [r for r in results if r[1] != 0]
+        print(f"done: {len(results) - len(bad)} ok, {len(bad)} failed")
+        for (arch, shape, mk), rc in bad:
+            print(f"  FAILED: {arch} x {shape} x {mk}")
+        sys.exit(1 if bad else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    for mk in mesh_kinds:
+        rec = run_cell(args.arch, args.shape, mk, args.out,
+                       fsdp=fsdp, remat=not args.no_remat,
+                       sp=not args.no_sp, attn_opt=args.attn_opt,
+                       moe_impl=args.moe_impl, tag=args.tag)
+        ok = rec["status"] == "ok"
+        print(json.dumps(
+            {k: rec.get(k) for k in
+             ("arch", "shape", "mesh", "status", "hlo_flops", "hlo_bytes",
+              "collective_bytes_total", "compute_s", "memory_s",
+              "collective_s", "dominant", "useful_flops_frac", "lower_s",
+              "compile_s", "error")}, indent=1))
+        if not ok:
+            print(rec.get("traceback", ""), file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): the single-pod mesh is (data=16, model=16) = 256 chips
+(one TPU v5e pod); the multi-pod mesh adds a leading "pod" axis =
+(2, 16, 16) = 512 chips.  At 1000+ nodes the pod axis simply grows — "pod"
+and "data" are both batch axes, so no model code changes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1-device mesh for CPU smoke tests (axis names preserved)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axis_size(mesh) -> int:
+    size = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            size *= mesh.shape[name]
+    return size

@@ -1,0 +1,218 @@
+"""Mamba layers: Mamba1 selective scan (falcon-mamba) and Mamba2 SSD-style
+(zamba2), with chunked associative scans.
+
+The diagonal-SSM recurrence  h_t = a_t ⊙ h_{t-1} + u_t  is computed with
+``jax.lax.associative_scan`` (log-depth network of concrete HLO ops — no
+while loop, so roofline FLOPs from ``cost_analysis`` are honest; see
+DESIGN.md §6).  To bound the transient state tensor (B, L, ..., N), the
+sequence is processed in Python-level chunks; the carry between chunks is
+applied via the chunk's cumulative decay.
+
+Sharding: d_inner (and mamba2 heads) shard over "model"; all recurrence
+ops are pointwise in d_inner, so the scan itself needs no collectives.
+The x-projection (d_inner → dt/B/C) contracts a sharded axis → GSPMD
+inserts a small all-reduce per chunk, visible in the dry-run HLO.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import BATCH_AXES, MODEL_AXIS, shard
+
+
+def _ssm_combine(e1, e2):
+    a1, u1 = e1
+    a2, u2 = e2
+    return a2 * a1, a2 * u1 + u2
+
+
+def chunked_diag_scan(a, u, h0=None, chunk: int = 1024):
+    """Diagonal recurrence h_t = a_t ⊙ h_{t-1} + u_t along axis 1.
+
+    a, u: (B, S, ...).  Returns (h (B, S, ...), h_last (B, ...)).
+    Python-chunked associative scan; carry folded in with cumulative decay.
+    """
+    b, s = a.shape[:2]
+    outs = []
+    carry = h0
+    for lo in range(0, s, chunk):
+        hi = min(lo + chunk, s)
+        ac, uc = a[:, lo:hi], u[:, lo:hi]
+        cum_a, h = jax.lax.associative_scan(_ssm_combine, (ac, uc), axis=1)
+        if carry is not None:
+            h = h + cum_a * carry[:, None]
+        carry = h[:, -1]
+        outs.append(h)
+    h_all = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
+    return h_all, carry
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along axis 1.  x: (B, S, C), w: (K, C).
+
+    ``state``: (B, K-1, C) left-context for decode/prefill continuation.
+    Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return y, xp[:, -(k - 1):] if k > 1 else state
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # (B, K-1, d_inner)
+    ssm: jnp.ndarray    # m1: (B, d_inner, N); m2: (B, H, P, N)
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+
+def mamba1_block(x, p, cfg, state: Optional[MambaState] = None,
+                 chunk: int = 1024):
+    """Mamba1 block.  x: (B, S, D) -> (out, new_state)."""
+    b, s, d = x.shape
+    di, n, dtr = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    xz = x @ p["in_proj"]                                   # (B,S,2*di)
+    xc, z = xz[..., :di], xz[..., di:]
+    xc = shard(xc, BATCH_AXES, None, MODEL_AXIS)
+    conv_state = state.conv if state is not None else None
+    xc, new_conv = _causal_conv(xc, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    xdbc = xc @ p["x_proj"]                                 # (B,S,dtr+2N)
+    dt = jax.nn.softplus(xdbc[..., :dtr] @ p["dt_proj"] + p["dt_bias"])
+    bmat = xdbc[..., dtr:dtr + n]                           # (B,S,N)
+    cmat = xdbc[..., dtr + n:]                              # (B,S,N)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (di,N)
+
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32[..., None] * a)                    # (B,S,di,N)
+    inc = (dt32 * xc.astype(jnp.float32))[..., None] \
+        * bmat.astype(jnp.float32)[:, :, None, :]           # (B,S,di,N)
+    h0 = state.ssm if state is not None else None
+    h, h_last = chunked_diag_scan(decay, inc, h0, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h, cmat.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["d_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return shard(out, BATCH_AXES, None, None), MambaState(new_conv, h_last)
+
+
+def init_mamba1(key, cfg, dtype=jnp.bfloat16):
+    d, di, n, dtr = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * d ** -0.5
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) * 0.2
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (di, dtr + 2 * n)) * di ** -0.5
+                   ).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dtr, di)) * dtr ** -0.5
+                    ).astype(dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def mamba1_init_state(cfg, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (zamba2): scalar-per-head decay, (H, P, N) state, SSD-style.
+# ---------------------------------------------------------------------------
+
+
+def mamba2_block(x, p, cfg, state: Optional[MambaState] = None,
+                 chunk: int = 512):
+    """Mamba2 block.  x: (B, S, D) -> (out, new_state).
+
+    Heads H = d_inner / head_dim; per-head scalar decay exp(dt_h * a_h).
+    """
+    b, s, d = x.shape
+    di, n, hd = cfg.d_inner, cfg.d_state, cfg.head_dim
+    nh = di // hd
+    zxbcdt = x @ p["in_proj"]                 # (B,S, 2*di + 2*N + nh)
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:2 * di]
+    bc = zxbcdt[..., 2 * di:2 * di + 2 * n]
+    dt = jax.nn.softplus(zxbcdt[..., 2 * di + 2 * n:] + p["dt_bias"])
+    xc = shard(xc, BATCH_AXES, None, MODEL_AXIS)
+
+    conv_state = state.conv if state is not None else None
+    conv_in = jnp.concatenate([xc, bc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"])
+    xc = conv_out[..., :di]
+    bmat = conv_out[..., di:di + n]
+    cmat = conv_out[..., di + n:]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))            # (nh,)
+    dt32 = dt.astype(jnp.float32)                           # (B,S,nh)
+    decay = jnp.exp(dt32 * a)                               # (B,S,nh)
+    xh = xc.reshape(b, s, nh, hd).astype(jnp.float32)
+    inc = jnp.einsum("bsh,bshp,bsn->bshpn", dt32, xh,
+                     bmat.astype(jnp.float32))              # (B,S,H,P,N)
+    h0 = state.ssm if state is not None else None
+    h, h_last = chunked_diag_scan(decay[..., None, None], inc, h0,
+                                  chunk=chunk)
+    y = jnp.einsum("bshpn,bsn->bshp", h, cmat.astype(jnp.float32))
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_gate(y, z, p["norm_w"])
+    out = y @ p["out_proj"]
+    return shard(out, BATCH_AXES, None, None), MambaState(new_conv, h_last)
+
+
+def rms_gate(y, z, w, eps=1e-6):
+    """Mamba2's gated RMSNorm: norm(y * silu(z)) * w."""
+    y = y * jax.nn.silu(z)
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + eps)
+    return (yf * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def init_mamba2(key, cfg, dtype=jnp.bfloat16):
+    d, di, n, hd = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.head_dim
+    nh = di // hd
+    ks = jax.random.split(key, 4)
+    conv_c = di + 2 * n
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * n + nh))
+                    * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, conv_c)) * 0.2
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_c,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def mamba2_init_state(cfg, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    nh = cfg.d_inner // cfg.head_dim
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner + 2 * cfg.d_state),
+                       dtype),
+        ssm=jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+    )

@@ -1,0 +1,299 @@
+"""Unified decoder covering all 10 assigned architectures.
+
+One parameter pytree + three entry points:
+  * ``forward(params, tokens, cfg)``            — train/prefill logits,
+  * ``prefill(params, tokens, cfg)``            — logits + decode state,
+  * ``decode_step(params, tok, state, cfg)``    — one token vs cached state.
+
+Families:
+  dense   — pre-norm GQA + SwiGLU (granite/minicpm/codeqwen/internvl2
+            backbone/musicgen); gemma2 adds local/global alternation,
+            logit softcaps and post-norms.
+  moe     — dense attention + routed-experts FFN (deepseek-moe, olmoe).
+  ssm     — Mamba1 stack, attention-free (falcon-mamba).
+  hybrid  — Mamba2 stack with a shared (tied-weights) attention+FFN block
+            every ``shared_attn_every`` layers (zamba2).
+
+Modality-frontend stubs (``cfg.embed_inputs``): inputs are precomputed
+(B, S, D) embeddings (InternViT patches / EnCodec frames per the brief);
+the embedding table is skipped on input but the LM head stays.
+
+Layers are Python-unrolled (no ``lax.scan`` over layers): XLA cost_analysis
+counts a while-loop body once, which would corrupt roofline FLOPs.  Layer
+parameters live in per-layer dicts under ``params["layers"][i]``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba as M
+from . import moe as X
+from .sharding import BATCH_AXES, MODEL_AXIS, shard
+
+
+class DecodeState(NamedTuple):
+    """Per-layer decode caches + current length (traced)."""
+    caches: Tuple              # per layer: (k, v) | MambaState | None
+    length: jnp.ndarray        # scalar int32: #tokens already cached
+
+
+# ---------------------------------------------------------------------------
+# Layer plumbing
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg) -> Tuple[str, ...]:
+    """Per-layer kind: 'attn' | 'moe_attn' | 'mamba1' | 'mamba2' | 'shared'.
+
+    hybrid (zamba2): mamba2 everywhere; a tied shared attention block fires
+    every ``shared_attn_every`` layers (its params are stored once under
+    params['shared_block']).
+    """
+    if cfg.family == "dense":
+        return tuple("attn" for _ in range(cfg.n_layers))
+    if cfg.family == "moe":
+        return tuple("moe_attn" for _ in range(cfg.n_layers))
+    if cfg.family == "ssm":
+        return tuple("mamba1" for _ in range(cfg.n_layers))
+    if cfg.family == "hybrid":
+        k = max(cfg.shared_attn_every, 1)
+        return tuple("mamba2+shared" if (i % k == k - 1) else "mamba2"
+                     for i in range(cfg.n_layers))
+    raise ValueError(cfg.family)
+
+
+def local_window_of(cfg, i: int) -> int:
+    """gemma2: even layers local (sliding window), odd layers global."""
+    if cfg.alt_local_global and cfg.local_window and i % 2 == 0:
+        return cfg.local_window
+    return 0
+
+
+def init_params(key, cfg, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                    * cfg.d_model ** -0.5).astype(dtype),
+        "layers": [],
+    }
+    kinds = layer_kinds(cfg)
+    for i, kind in enumerate(kinds):
+        k = keys[2 + i]
+        lp: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+        if kind == "attn":
+            k1, k2 = jax.random.split(k)
+            lp["attn"] = L.init_attn(k1, cfg, dtype)
+            lp["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+            lp["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+            if cfg.name.startswith("gemma2"):
+                lp["post_ln1"] = jnp.zeros((cfg.d_model,), dtype)
+                lp["post_ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        elif kind == "moe_attn":
+            k1, k2 = jax.random.split(k)
+            lp["attn"] = L.init_attn(k1, cfg, dtype)
+            lp["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+            lp["moe"] = X.init_moe(k2, cfg, dtype)
+        elif kind == "mamba1":
+            lp["mamba"] = M.init_mamba1(k, cfg, dtype)
+        else:  # mamba2 / mamba2+shared
+            lp["mamba"] = M.init_mamba2(k, cfg, dtype)
+        params["layers"].append(lp)
+    if cfg.family == "hybrid":
+        k1, k2 = jax.random.split(keys[-1])
+        params["shared_block"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.init_attn(k1, cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    return params
+
+
+def _attn_mlp_block(x, lp, cfg, *, positions, window, kv_cache, cache_len,
+                    gemma2: bool, moe: bool):
+    """Pre-norm attention + FFN residual block. Returns (x, new_cache, aux)."""
+    h = L.rms_norm(x, lp["ln1"], cfg.eps)
+    a, new_cache = L.attention(h, lp["attn"], cfg, positions=positions,
+                               window=window, kv_cache=kv_cache,
+                               cache_len=cache_len)
+    if gemma2:
+        a = L.rms_norm(a, lp["post_ln1"], cfg.eps)
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"], cfg.eps)
+    aux = jnp.float32(0.0)
+    if moe:
+        f, aux = X.moe_ffn(h, lp["moe"], cfg)
+    else:
+        f = L.swiglu(h, lp["mlp"])
+    if gemma2:
+        f = L.rms_norm(f, lp["post_ln2"], cfg.eps)
+    return x + f, new_cache, aux
+
+
+def _backbone(params, x, cfg, *, positions, caches=None, cache_len=None,
+              remat: bool = False, sp: bool = False):
+    """Run the layer stack.  caches: per-layer decode caches (or None).
+
+    ``remat``: wrap each layer block in ``jax.checkpoint`` (train mode) —
+    in-block intermediates (attention probs, FFN hidden, SSM transients)
+    are recomputed in backward; only block-boundary residuals are saved.
+
+    ``sp``: Megatron-style sequence parallelism — the inter-block residual
+    stream is sharded over the *model* axis on the sequence dim, so saved
+    activations cost (B·S·D)/(dp·tp) per layer instead of (B·S·D)/dp.
+    GSPMD inserts the all-gather at each block's first projection and the
+    reduce-scatter after its last.  This is what lets 64-80-layer archs
+    train within 16 GB/chip (see DESIGN.md §5, EXPERIMENTS.md §Perf).
+
+    Returns (hidden, new_caches, total_aux_loss).
+    """
+    kinds = layer_kinds(cfg)
+    gemma2 = cfg.name.startswith("gemma2")
+    decode = caches is not None
+    new_caches = []
+    aux_total = jnp.float32(0.0)
+
+    def sp_shard(t):
+        return shard(t, BATCH_AXES, MODEL_AXIS, None) if sp else t
+
+    def attn_block(xi, lpi, *, window, moe, cache):
+        xi, nc, aux = _attn_mlp_block(
+            xi, lpi, cfg, positions=positions, window=window,
+            kv_cache=cache, cache_len=cache_len, gemma2=gemma2, moe=moe)
+        return sp_shard(xi), nc, aux
+
+    def mamba_block(xi, lpi, *, v2, cache):
+        h = L.rms_norm(xi, lpi["ln1"], cfg.eps)
+        fn = M.mamba2_block if v2 else M.mamba1_block
+        y, st = fn(h, lpi["mamba"], cfg, state=cache)
+        return sp_shard(xi + y), st
+
+    for i, (kind, lp) in enumerate(zip(kinds, params["layers"])):
+        cache = caches[i] if decode else None
+        if kind in ("attn", "moe_attn"):
+            blk = functools.partial(attn_block,
+                                    window=local_window_of(cfg, i),
+                                    moe=(kind == "moe_attn"), cache=cache)
+            if remat and not decode:
+                blk = jax.checkpoint(blk)
+            x, nc, aux = blk(x, lp)
+            aux_total = aux_total + aux
+            new_caches.append(nc)
+        elif kind == "mamba1":
+            blk = functools.partial(mamba_block, v2=False, cache=cache)
+            if remat and not decode:
+                blk = jax.checkpoint(blk)
+            x, st = blk(x, lp)
+            new_caches.append(st)
+        else:  # mamba2 (+shared)
+            shared_cache = None
+            if kind == "mamba2+shared" and decode:
+                cache, shared_cache = cache  # (MambaState, (k, v))
+            blk = functools.partial(mamba_block, v2=True, cache=cache)
+            if remat and not decode:
+                blk = jax.checkpoint(blk)
+            x, st = blk(x, lp)
+            if kind == "mamba2+shared":
+                sblk = functools.partial(attn_block, window=0, moe=False,
+                                         cache=shared_cache)
+                if remat and not decode:
+                    sblk = jax.checkpoint(sblk)
+                x, sc, _ = sblk(x, params["shared_block"])
+                new_caches.append((st, sc))
+            else:
+                new_caches.append(st)
+    return x, tuple(new_caches), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def embed(params, tokens, cfg):
+    """tokens: (B, S) int32 ids, or (B, S, D) precomputed embeddings."""
+    if cfg.embed_inputs and tokens.ndim == 3:
+        x = tokens.astype(params["embed"].dtype)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.name.startswith("gemma2"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return shard(x, BATCH_AXES, None, None)
+
+
+def unembed(params, x, cfg):
+    x = L.rms_norm(x, params["final_norm"], cfg.eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                        preferred_element_type=jnp.float32)
+    logits = L.softcap(logits, cfg.final_softcap)
+    return shard(logits, BATCH_AXES, None, MODEL_AXIS)
+
+
+def forward(params, tokens, cfg, *, positions=None, remat: bool = False,
+            sp: bool = False):
+    """Train/eval forward: full-sequence logits (B, S, V) + aux loss."""
+    b, s = tokens.shape[:2]
+    if positions is None:
+        positions = jnp.arange(s)
+    x = embed(params, tokens, cfg)
+    x, _, aux = _backbone(params, x, cfg, positions=positions, remat=remat,
+                          sp=sp)
+    return unembed(params, x, cfg), aux
+
+
+def init_decode_state(params, cfg, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    """Allocate decode caches: KV (B, T, KV, dh) / MambaState per layer."""
+    kinds = layer_kinds(cfg)
+    caches = []
+    for i, kind in enumerate(kinds):
+        if kind in ("attn", "moe_attn"):
+            shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+            caches.append((jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)))
+        elif kind == "mamba1":
+            caches.append(M.mamba1_init_state(cfg, batch, dtype))
+        elif kind == "mamba2+shared":
+            shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+            caches.append((M.mamba2_init_state(cfg, batch, dtype),
+                           (jnp.zeros(shape, dtype),
+                            jnp.zeros(shape, dtype))))
+        else:
+            caches.append(M.mamba2_init_state(cfg, batch, dtype))
+    return DecodeState(tuple(caches), jnp.int32(0))
+
+
+def prefill(params, tokens, cfg, state: DecodeState):
+    """Prefill the decode state with a prompt.  Returns (logits, state).
+
+    Attention layers write tokens into their caches at ``state.length``;
+    mamba layers fold the prompt into their recurrent state.
+    """
+    b, s = tokens.shape[:2]
+    positions = state.length + jnp.arange(s)
+    x = embed(params, tokens, cfg)
+    x, caches, _ = _backbone(params, x, cfg, positions=positions,
+                             caches=state.caches, cache_len=state.length)
+    return unembed(params, x, cfg), DecodeState(caches, state.length + s)
+
+
+def decode_step(params, tok, cfg, state: DecodeState):
+    """One decode step.  tok: (B,) int32 (or (B, 1, D) embedded).
+
+    Returns (logits (B, V), new state).
+    """
+    if tok.ndim == 1:
+        tok = tok[:, None]
+    positions = state.length[None] + jnp.zeros((1,), jnp.int32)
+    x = embed(params, tok, cfg)
+    x, caches, _ = _backbone(params, x, cfg, positions=positions,
+                             caches=state.caches, cache_len=state.length)
+    logits = unembed(params, x, cfg)
+    return logits[:, 0], DecodeState(caches, state.length + 1)

@@ -1,0 +1,238 @@
+"""Mixture-of-Experts FFN: DeepSeekMoE / OLMoE style routed experts.
+
+Design (TPU-native, FLOPs-honest):
+  * token-choice top-k routing with softmax gate,
+  * capacity-based dispatch (GShard/Switch style): tokens are scattered
+    into per-expert slots of capacity C = ceil(S*K/E * capacity_factor);
+    over-capacity assignments are dropped.  Scatter/gather are index ops
+    (≈0 FLOPs), so compiled expert FLOPs ≈ capacity_factor × active
+    FLOPs — honest for the roofline (unlike one-hot dispatch einsums,
+    which inflate FLOPs by ~E/K, or dense-all-experts, which computes
+    E/K × the active compute).
+  * shared experts (DeepSeekMoE) run densely on every token.
+
+Expert parallelism: expert-indexed weights (E, D, F) are sharded over the
+"model" mesh axis on E; the dispatched activations (B, E, C, D) follow,
+giving all-to-all-style exchanges inserted by GSPMD at the dispatch
+scatter / combine gather.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import BATCH_AXES, MODEL_AXIS, active_axes, active_sizes, \
+    shard
+
+# Dispatch implementation: "gspmd" (baseline — scatter partitioned by
+# GSPMD; compiles everywhere but GSPMD materializes huge resharding
+# collectives around the scatter) or "ep" (optimized — shard_map expert
+# parallelism: local dispatch to the model-shard's own experts + ONE
+# explicit psum per layer).  Selected by the launcher; see EXPERIMENTS.md
+# §Perf for the measured delta.
+_MOE_IMPL = "gspmd"
+
+
+def set_impl(name: str) -> None:
+    global _MOE_IMPL
+    assert name in ("gspmd", "ep")
+    _MOE_IMPL = name
+
+
+def get_impl() -> str:
+    return _MOE_IMPL
+
+
+def route_topk(x, router_w, k: int):
+    """Softmax gate + top-k.  Returns (weights (B,S,K), experts (B,S,K),
+    router probs (B,S,E) for the aux loss)."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return topw, topi, probs
+
+
+def load_balance_loss(probs, topi, n_experts: int) -> jnp.ndarray:
+    """Switch-Transformer auxiliary load-balancing loss."""
+    # fraction of tokens dispatched to each expert (first choice proxy)
+    counts = jax.nn.one_hot(topi[..., 0], n_experts, dtype=jnp.float32)
+    f = counts.mean(axis=(0, 1))
+    p = probs.mean(axis=(0, 1))
+    return n_experts * jnp.sum(f * p)
+
+
+def moe_ffn(x, p, cfg, capacity_factor: float = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Routed-experts FFN.  x: (B, S, D) -> (out, aux_loss).
+
+    Dispatches to the implementation selected by ``set_impl`` ("ep" only
+    engages when a mesh with a compatible "model" axis is active).
+    """
+    if capacity_factor is None:
+        capacity_factor = getattr(cfg, "moe_capacity_factor", 1.25)
+    if _MOE_IMPL == "ep" and MODEL_AXIS in active_axes():
+        tp = active_sizes().get(MODEL_AXIS, 1)
+        if tp > 1 and cfg.n_experts % tp == 0:
+            return moe_ffn_ep(x, p, cfg, capacity_factor=capacity_factor)
+    return moe_ffn_gspmd(x, p, cfg, capacity_factor=capacity_factor)
+
+
+def moe_ffn_gspmd(x, p, cfg, capacity_factor: float = 1.25
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Baseline dispatch: capacity scatter partitioned by GSPMD.
+
+    p: {"router": (D, E), "wg"/"wu": (E, D, F), "wd": (E, F, D),
+        optional "shared": swiglu params}.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    f = cfg.d_expert
+    topw, topi, probs = route_topk(x, p["router"], k)
+    aux = load_balance_loss(probs, topi, e)
+
+    cap = int(max(1, round(s * k / e * capacity_factor)))
+    # Flatten the (token, choice) assignments.
+    tk = s * k
+    e_flat = topi.reshape(b, tk)                       # expert per assignment
+    w_flat = topw.reshape(b, tk)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)      # (B, TK, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                # pos within expert
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (B, TK)
+    keep = pos < cap
+    slot = jnp.where(keep, e_flat * cap + pos, e * cap)      # overflow slot
+
+    tok_idx = jnp.arange(tk) // k                            # (TK,)
+    x_rep = jnp.take(x, tok_idx, axis=1)                     # (B, TK, D)
+    b_idx = jnp.arange(b)[:, None]
+
+    disp = jnp.zeros((b, e * cap + 1, d), x.dtype)
+    disp = disp.at[b_idx, slot].add(
+        x_rep * keep[..., None].astype(x.dtype))
+    disp = disp[:, : e * cap].reshape(b, e, cap, d)
+    disp = shard(disp, BATCH_AXES, MODEL_AXIS, None, None)
+
+    # Expert SwiGLU: (B, E, C, D) x (E, D, F) — E sharded over "model".
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", disp, p["wg"])) \
+        * jnp.einsum("becd,edf->becf", disp, p["wu"])
+    h = shard(h, BATCH_AXES, MODEL_AXIS, None, None)
+    y = jnp.einsum("becf,efd->becd", h, p["wd"])
+    y = shard(y, BATCH_AXES, MODEL_AXIS, None, None)
+
+    # Combine: gather each assignment's expert output, weight, sum over k.
+    y_flat = y.reshape(b, e * cap, d)
+    y_flat = jnp.concatenate(
+        [y_flat, jnp.zeros((b, 1, d), y.dtype)], axis=1)
+    y_tok = y_flat[b_idx, slot]                              # (B, TK, D)
+    y_tok = y_tok * (w_flat * keep)[..., None].astype(y.dtype)
+    out = y_tok.reshape(b, s, k, d).sum(axis=2)
+
+    if "shared" in p:
+        from .layers import swiglu
+        out = out + swiglu(x, p["shared"])
+    return shard(out, BATCH_AXES, None, None), aux
+
+
+def moe_ffn_ep(x, p, cfg, capacity_factor: float = 1.25
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Optimized expert parallelism (shard_map).
+
+    Activations are batch-sharded over ("pod","data") and REPLICATED over
+    "model"; experts are sharded over "model".  Therefore no all-to-all
+    is needed at all: every model shard locally dispatches its (replica
+    of the) tokens to *its own* E/tp experts, runs them, locally
+    combines, and ONE ``psum`` over "model" sums the per-shard partial
+    outputs — the same collective shape as a Megatron TP FFN.  GSPMD's
+    baseline, by contrast, partitions the global scatter and emits
+    full-tensor reshards (measured ~50x more collective bytes; §Perf).
+
+    shard_map autodiff inserts the matching psums for the replicated
+    inputs' cotangents, so this trains (used by train_step when
+    ``set_impl("ep")``).
+    """
+    batch_axes = tuple(a for a in BATCH_AXES if a in active_axes())
+    e, k, f, d = cfg.n_experts, cfg.top_k, cfg.d_expert, cfg.d_model
+    tp = active_sizes()[MODEL_AXIS]
+    e_loc = e // tp
+
+    def local(x_loc, router, wg, wu, wd):
+        b, s, _ = x_loc.shape
+        topw, topi, probs = route_topk(x_loc, router, k)
+        # aux loss with GLOBAL means (pmean f and p before the product),
+        # so it equals the gspmd path's global statistic exactly
+        f_loc = jax.nn.one_hot(topi[..., 0], e,
+                               dtype=jnp.float32).mean(axis=(0, 1))
+        p_loc = probs.mean(axis=(0, 1))
+        if batch_axes:
+            f_loc = jax.lax.pmean(f_loc, batch_axes)
+            p_loc = jax.lax.pmean(p_loc, batch_axes)
+        aux = e * jnp.sum(f_loc * p_loc)
+
+        m_id = jax.lax.axis_index(MODEL_AXIS)
+        cap = int(max(1, round(s * k / e * capacity_factor)))
+        tk = s * k
+        e_flat = topi.reshape(b, tk)
+        w_flat = topw.reshape(b, tk)
+        mine = (e_flat // e_loc) == m_id                  # my experts only
+        le = jnp.where(mine, e_flat % e_loc, e_loc)       # local expert id
+        onehot = jax.nn.one_hot(le, e_loc, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=1) - onehot
+        pos = jnp.sum(pos * onehot, axis=-1)
+        keep = mine & (pos < cap)
+        slot = jnp.where(keep, le * cap + pos, e_loc * cap)
+
+        tok_idx = jnp.arange(tk) // k
+        x_rep = jnp.take(x_loc, tok_idx, axis=1)          # (B, TK, D)
+        b_idx = jnp.arange(b)[:, None]
+        disp = jnp.zeros((b, e_loc * cap + 1, d), x_loc.dtype)
+        disp = disp.at[b_idx, slot].add(
+            x_rep * keep[..., None].astype(x_loc.dtype))
+        disp = disp[:, :e_loc * cap].reshape(b, e_loc, cap, d)
+
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", disp, wg)) \
+            * jnp.einsum("becd,edf->becf", disp, wu)
+        y = jnp.einsum("becf,efd->becd", h, wd)
+
+        y_flat = y.reshape(b, e_loc * cap, d)
+        y_flat = jnp.concatenate(
+            [y_flat, jnp.zeros((b, 1, d), y.dtype)], axis=1)
+        y_tok = y_flat[b_idx, slot]
+        y_tok = y_tok * (w_flat * keep)[..., None].astype(y.dtype)
+        out = y_tok.reshape(b, s, k, d).sum(axis=2)
+        # partial sum: only my experts' contributions — combine shards
+        out = jax.lax.psum(out, MODEL_AXIS)
+        return out, aux
+
+    from jax.sharding import PartitionSpec as P
+    in_specs = (P(batch_axes or None, None, None),   # x
+                P(None, None),                       # router (gathered)
+                P(MODEL_AXIS, None, None),           # wg
+                P(MODEL_AXIS, None, None),           # wu
+                P(MODEL_AXIS, None, None))           # wd
+    out_specs = (P(batch_axes or None, None, None), P())
+    out, aux = jax.shard_map(local, in_specs=in_specs,
+                             out_specs=out_specs)(
+        x, p["router"].astype(jnp.float32), p["wg"], p["wu"], p["wd"])
+
+    if "shared" in p:
+        from .layers import swiglu
+        out = out + swiglu(x, p["shared"])
+    return shard(out, BATCH_AXES, None, None), aux
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    p = {
+        "router": (jax.random.normal(k1, (d, e)) * d ** -0.5
+                   ).astype(jnp.float32),
+        "wg": (jax.random.normal(k2, (e, d, f)) * d ** -0.5).astype(dtype),
+        "wu": (jax.random.normal(k3, (e, d, f)) * d ** -0.5).astype(dtype),
+        "wd": (jax.random.normal(k4, (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(k5, d, cfg.n_shared_experts * f, dtype)
+    return p

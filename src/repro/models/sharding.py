@@ -1,0 +1,106 @@
+"""Sharding vocabulary for the production mesh.
+
+Logical axes:
+  * ``pod``   — outermost data-parallel axis (multi-pod dry-run),
+  * ``data``  — within-pod data parallelism,
+  * ``model`` — tensor parallelism (heads / FFN / experts / vocab).
+
+``shard(x, *axes)`` annotates intermediates with
+``with_sharding_constraint``; it is a no-op unless the launcher has
+activated a sharding environment via ``sharding_env(mesh)`` (so the same
+model code runs unsharded on one CPU device for smoke tests).  Axis names
+not present in the active mesh are dropped, so a single set of annotations
+serves both the single-pod ``("data","model")`` and multi-pod
+``("pod","data","model")`` meshes.
+
+Batch dims shard over ("pod","data"); d_ff / heads / experts / vocab over
+"model".  Sequence parallelism for long-context decode shards the KV-cache
+sequence axis over "data" (batch=1 leaves it idle) — see serve/decode.py.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+_state = threading.local()
+
+
+def active_axes() -> Tuple[str, ...]:
+    return getattr(_state, "axes", ())
+
+
+def active_sizes() -> dict:
+    return getattr(_state, "sizes", {})
+
+
+@contextmanager
+def sharding_env(mesh):
+    """Activate sharding annotations for ``mesh`` (launcher-side)."""
+    prev = active_axes()
+    prev_sizes = active_sizes()
+    _state.axes = tuple(mesh.axis_names)
+    _state.sizes = {a: int(mesh.shape[a]) for a in mesh.axis_names}
+    try:
+        with jax.set_mesh(mesh):
+            yield mesh
+    finally:
+        _state.axes = prev
+        _state.sizes = prev_sizes
+
+
+def norm_spec(spec: P) -> Optional[P]:
+    """Drop axis names not in the active env; None if env inactive."""
+    names = active_axes()
+    if not names:
+        return None
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(entry if entry in names else None)
+    return P(*out)
+
+
+def shard(x, *axes):
+    """with_sharding_constraint(x, P(*axes)) when a sharding env is active.
+
+    Each entry of ``axes`` is an axis name, a tuple of names, or None.
+    Entries whose mesh-axis product does not divide the array dim are
+    dropped (a constraint like "8 heads over 16 chips" would force GSPMD
+    into involuntary resharding/full-remat copies — better to leave the
+    dim unconstrained and let propagation pick the layout).
+    """
+    spec = norm_spec(P(*axes))
+    if spec is None:
+        return x
+    sizes = active_sizes()
+    fixed = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            fixed.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for a in names:
+            prod *= sizes.get(a, 1)
+        if dim < x.ndim and prod > 0 and x.shape[dim] % prod == 0:
+            fixed.append(entry)
+        else:
+            fixed.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def batch_spec(ndim: int) -> P:
+    """(batch, ...) sharded over ("pod","data")."""
+    return P(BATCH_AXES, *([None] * (ndim - 1)))

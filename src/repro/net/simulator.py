@@ -1,0 +1,72 @@
+"""Epoch-driven replay engine: feeds per-switch packet streams to a system.
+
+Precomputes, for every switch, the indices of packets whose path traverses
+it (packets are replayed chronologically; the epoch split uses timestamps,
+so subepoch semantics are exact).  Drives any system exposing
+``run_epoch(epoch, {switch: SwitchStream})``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.disketch import SwitchStream
+from .traffic import Workload
+
+
+class Replayer:
+    def __init__(self, wl: Workload, n_switches: int):
+        self.wl = wl
+        self.n_switches = n_switches
+        pkt_keys = wl.pkt_keys
+        single_hop_flow = wl.path_len == 1
+        epoch_of = (wl.pkt_ts >> wl.log2_te).astype(np.int64)
+        # Per-switch packet index lists, pre-split by epoch.
+        self._streams: List[Dict[int, SwitchStream]] = [
+            {} for _ in range(wl.n_epochs)]
+        for sw in range(n_switches):
+            on_path = (wl.path_mat == sw).any(axis=1)  # per flow
+            pkt_sel = on_path[wl.pkt_flow]
+            if not pkt_sel.any():
+                continue
+            idx = np.nonzero(pkt_sel)[0]
+            e = epoch_of[idx]
+            order = np.argsort(e, kind="stable")
+            idx = idx[order]
+            bounds = np.searchsorted(e[order], np.arange(wl.n_epochs + 1))
+            for ep in range(wl.n_epochs):
+                lo, hi = bounds[ep], bounds[ep + 1]
+                if lo == hi:
+                    continue
+                sl = idx[lo:hi]
+                self._streams[ep][sw] = SwitchStream(
+                    keys=pkt_keys[sl],
+                    values=np.ones(len(sl), dtype=np.int64),
+                    ts=wl.pkt_ts[sl],
+                    single_hop=single_hop_flow[wl.pkt_flow[sl]],
+                )
+
+    def run(self, system) -> None:
+        for ep in range(self.wl.n_epochs):
+            system.run_epoch(ep, self._streams[ep])
+
+    def epoch_stream(self, epoch: int) -> Dict[int, SwitchStream]:
+        return self._streams[epoch]
+
+
+def rmse(est: np.ndarray, truth: np.ndarray) -> float:
+    e = np.asarray(est, dtype=np.float64) - np.asarray(truth,
+                                                       dtype=np.float64)
+    return float(np.sqrt(np.mean(e * e)))
+
+
+def nrmse(est: np.ndarray, truth: np.ndarray, total: float) -> float:
+    """Paper §6.3: RMSE normalized by total packet count (dimensionless)."""
+    return rmse(est, truth) / max(float(total), 1.0)
+
+
+def are(est: np.ndarray, truth: np.ndarray) -> float:
+    """Average relative error over queried flows."""
+    t = np.maximum(np.asarray(truth, dtype=np.float64), 1.0)
+    return float(np.mean(np.abs(np.asarray(est) - truth) / t))

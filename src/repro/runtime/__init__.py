@@ -1,0 +1,5 @@
+from .fault_tolerance import (HeartbeatMonitor, ElasticMesh,
+                              StragglerPolicy, TrainingSupervisor)
+
+__all__ = ["HeartbeatMonitor", "ElasticMesh", "StragglerPolicy",
+           "TrainingSupervisor"]

@@ -1,0 +1,3 @@
+from .decode import make_prefill_step, make_serve_step, sample_greedy
+
+__all__ = ["make_prefill_step", "make_serve_step", "sample_greedy"]

@@ -1,0 +1,68 @@
+"""Serving steps: prefill + single-token decode against cached state.
+
+Shapes (the assigned input-shape sets):
+  * ``prefill_32k``  — ``prefill_step``: (B, S) prompt -> logits + state.
+  * ``decode_32k``   — ``serve_step``: one new token per sequence against a
+    KV cache (or SSM state) of length seq_len.
+  * ``long_500k``    — ``serve_step`` at 512k context; only lowered for
+    sub-quadratic archs (SSM/hybrid), per DESIGN.md §4.  The KV-free SSM
+    state makes this O(1) per token; the hybrid's single shared attention
+    block holds the only 512k KV cache, sharded over the sequence axis.
+
+Sharding: KV caches shard (batch over ("pod","data"), heads over "model");
+for ``long_500k`` (batch=1) the cache sequence axis shards over "data"
+(sequence parallelism) so a 512k cache fits per-device HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as MDL
+from ..models.sharding import BATCH_AXES, MODEL_AXIS, shard
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(cfg, max_len: Optional[int] = None):
+    """(params, tokens) -> (logits, DecodeState).  tokens: (B, S) or
+    (B, S, D) for embed-input archs."""
+
+    def prefill_step(params, tokens):
+        b, s = tokens.shape[:2]
+        state = MDL.init_decode_state(params, cfg, b, max_len or s)
+        return MDL.prefill(params, tokens, cfg, state)
+
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """(params, tok, state) -> (next_tok, logits, state): one decode step.
+
+    ``tok``: (B,) int32 — or (B, 1, D) embeddings for frontend-stub archs.
+    """
+
+    def serve_step(params, tok, state):
+        logits, state = MDL.decode_step(params, tok, cfg, state)
+        return sample_greedy(logits), logits, state
+
+    return serve_step
+
+
+def decode_loop(params, cfg, prompt, n_steps: int):
+    """Reference autoregressive loop (greedy).  Used by tests/examples;
+    production serving jits ``serve_step`` and drives batching outside."""
+    prefill_step = make_prefill_step(cfg, max_len=prompt.shape[1] + n_steps)
+    serve_step = jax.jit(make_serve_step(cfg))
+    logits, state = prefill_step(params, prompt)
+    tok = sample_greedy(logits[:, -1])
+    out = [tok]
+    for _ in range(n_steps - 1):
+        tok, _, state = serve_step(params, tok, state)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,5 @@
+from .optimizer import adamw_init, adamw_update, cosine_schedule, wsd_schedule
+from .train_step import loss_fn, make_train_step
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule", "wsd_schedule",
+           "loss_fn", "make_train_step"]

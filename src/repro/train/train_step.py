@@ -1,0 +1,92 @@
+"""Training step: causal-LM loss, grad clip, AdamW, optional DiSketch
+gradient compression.
+
+``make_train_step`` builds a jit-able function
+    (state: TrainState, batch) -> (TrainState, metrics)
+where ``TrainState = (params, opt, comp, step)``; ``comp`` is the gradient-
+compressor state (error-feedback residual + fragment sketches) or an empty
+tuple when compression is off.
+
+Loss is computed in float32 (logits already f32 via
+preferred_element_type).  Labels < 0 are masked.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as MDL
+from ..models.sharding import BATCH_AXES, shard
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    comp: Any            # gradient-compressor state (or ())
+    step: jnp.ndarray
+
+
+def loss_fn(params, tokens, labels, cfg, *, aux_weight: float = 0.01,
+            remat: bool = False, sp: bool = False):
+    """Mean next-token cross-entropy + MoE aux loss."""
+    logits, aux = MDL.forward(params, tokens, cfg, remat=remat, sp=sp)
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def init_train_state(params, compressor=None) -> TrainState:
+    from .optimizer import adamw_init
+    comp = compressor.init(params) if compressor is not None else ()
+    return TrainState(params, adamw_init(params), comp,
+                      jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg, lr_schedule: Callable, *,
+                    compressor=None,
+                    aux_weight: float = 0.01,
+                    weight_decay: float = 0.1,
+                    grad_clip: float = 1.0,
+                    remat: bool = True,
+                    sp: bool = True):
+    """Build the train step.  ``compressor``: optional DiSketch gradient
+    compressor (train/compress.py).  ``remat``/``sp``: activation
+    checkpointing + sequence-parallel residuals (see models/model.py)."""
+    from .optimizer import adamw_update
+
+    def step_fn(state: TrainState, batch):
+        params = state.params
+        tokens = shard(batch["tokens"], BATCH_AXES, None)
+        labels = shard(batch["labels"], BATCH_AXES, None)
+        grad_fn = jax.value_and_grad(
+            lambda p: loss_fn(p, tokens, labels, cfg,
+                              aux_weight=aux_weight, remat=remat, sp=sp),
+            has_aux=True)
+        (_, (loss, aux)), grads = grad_fn(params)
+        comp = state.comp
+        if compressor is not None:
+            grads, comp = compressor.apply(grads, comp, state.step)
+        lr = lr_schedule(state.step)
+        params, opt, gnorm = adamw_update(
+            params, grads, state.opt, lr=lr,
+            weight_decay=weight_decay, grad_clip=grad_clip)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr": lr}
+        return TrainState(params, opt, comp, state.step + 1), metrics
+
+    return step_fn
+
+
+def make_eval_step(cfg):
+    def eval_fn(params, batch):
+        _, (loss, _) = loss_fn(params, batch["tokens"], batch["labels"], cfg)
+        return loss
+    return eval_fn

@@ -1,0 +1,79 @@
+"""Checkpoint tests: roundtrip, atomicity, integrity, pruning."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones(5, jnp.int32),
+                  "d": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    save_checkpoint(d, 7, tree, extra={"note": "x"})
+    like = {"a": jnp.zeros((3, 4)), "b": {"c": jnp.zeros(5, jnp.int32),
+                                          "d": jnp.float32(0)}}
+    out, step, extra = restore_checkpoint(d, like)
+    assert step == 7 and extra == {"note": "x"}
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                  np.asarray(tree["b"]["c"]))
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    save_checkpoint(d, 5, tree)
+    # simulate a crash mid-save at step 9: no _COMMITTED marker
+    os.makedirs(os.path.join(d, "step_000000009"))
+    with open(os.path.join(d, "step_000000009", "manifest.json"), "w") as f:
+        f.write("{}")
+    assert latest_step(d) == 5
+    out, step, _ = restore_checkpoint(d, tree)
+    assert step == 5
+
+
+def test_checksum_detects_corruption(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    path = save_checkpoint(d, 3, tree)
+    # corrupt one array file
+    victim = os.path.join(path, "arr_00000.npy")
+    with open(victim, "r+b") as f:
+        f.seek(-1, 2)
+        f.write(b"\xFF")
+    with pytest.raises(IOError, match="checksum"):
+        restore_checkpoint(d, tree)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 1, _tree())
+    bad = {"a": jnp.zeros((4, 4)), "b": {"c": jnp.zeros(5, jnp.int32),
+                                         "d": jnp.float32(0)}}
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(d, bad)
+
+
+def test_prune_keeps_newest(tmp_path):
+    d = str(tmp_path / "ck")
+    for s in [1, 2, 3, 4, 5]:
+        save_checkpoint(d, s, _tree(), keep=2)
+    steps = sorted(int(n[5:]) for n in os.listdir(d)
+                   if n.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_restore_empty_dir(tmp_path):
+    out, step, extra = restore_checkpoint(str(tmp_path / "none"), _tree())
+    assert out is None and step is None

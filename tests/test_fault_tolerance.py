@@ -1,0 +1,124 @@
+"""Fault-tolerance runtime tests: heartbeats, elastic re-mesh, straggler
+policy, the supervisor restart loop."""
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import (ElasticMesh, HeartbeatMonitor,
+                                           StragglerPolicy,
+                                           TrainingSupervisor)
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_silence():
+    clk = Clock()
+    mon = HeartbeatMonitor(4, timeout_s=10, clock=clk)
+    clk.t = 5
+    for h in [0, 1, 3]:
+        mon.beat(h)
+    clk.t = 12
+    assert mon.failed_hosts() == {2}
+    assert mon.healthy_hosts() == [0, 1, 3]
+    mon.beat(2)
+    assert mon.failed_hosts() == set()
+
+
+def test_elastic_mesh_drops_rows():
+    em = ElasticMesh(pod=2, data=4, model=16, devices_per_host=4)
+    assert em.hosts_per_row == 4 and em.n_hosts == 32
+    # all healthy -> full multi-pod mesh
+    plan = em.plan(range(32))
+    assert plan.shape == (2, 4, 16)
+    # kill one host in pod 1 -> that pod incomplete -> flat mesh of rows
+    healthy = [h for h in range(32) if h != 17]
+    plan = em.plan(healthy)
+    assert plan.shape == (7, 16)           # 7 healthy rows
+    assert 17 not in plan.hosts
+    # kill a host in each pod -> no complete pod, still 6 rows
+    healthy = [h for h in range(32) if h not in (1, 17)]
+    plan = em.plan(healthy)
+    assert plan.shape == (6, 16)
+
+
+def test_elastic_mesh_no_rows_raises():
+    em = ElasticMesh(pod=1, data=2, model=4, devices_per_host=4)
+    with pytest.raises(RuntimeError):
+        em.plan([0])  # each row needs 1 host; only host 0 healthy of row 0
+        em.plan([])
+
+
+def test_straggler_quarantine_and_readmit():
+    pol = StragglerPolicy(threshold=1.5, patience=2)
+    base = {h: 1.0 for h in range(8)}
+    slow = {**base, 3: 5.0}
+    assert pol.observe(slow) == set()      # first strike
+    assert pol.observe(slow) == {3}        # second strike -> quarantined
+    assert 3 in pol.quarantined
+    pol.readmit(3)
+    assert 3 not in pol.quarantined
+
+
+def test_straggler_resets_on_recovery():
+    pol = StragglerPolicy(threshold=1.5, patience=3)
+    slow = {0: 1.0, 1: 1.0, 2: 9.9}
+    ok = {0: 1.0, 1: 1.0, 2: 1.0}
+    pol.observe(slow)
+    pol.observe(ok)                        # streak resets
+    pol.observe(slow)
+    pol.observe(slow)
+    assert pol.quarantined == set()        # never hit 3 consecutive
+
+
+def test_supervisor_restart_loop():
+    clk = Clock()
+    em = ElasticMesh(pod=1, data=4, model=4, devices_per_host=4)
+    mon = HeartbeatMonitor(em.n_hosts, timeout_s=10, clock=clk)
+    sup = TrainingSupervisor(em, mon, ckpt_every=10, max_restarts=3)
+
+    saved = {"step": 0}
+    fail_at = {25}
+
+    def step_fn(step, plan):
+        if step in fail_at:
+            fail_at.discard(step)
+            # host 1 dies: stop beating
+            clk.t += 100
+            for h in range(em.n_hosts):
+                if h != 1:
+                    mon.beat(h)
+            raise RuntimeError("collective timeout")
+
+    def save_fn(step):
+        saved["step"] = step
+
+    def restore_fn():
+        return saved["step"]
+
+    rep = sup.run(40, step_fn, save_fn, restore_fn)
+    assert rep.steps_done == 40
+    assert rep.restarts == 1
+    assert rep.final_mesh == (3, 4)        # lost host 1 -> row 1 gone
+    assert any("re-meshing" in e for e in rep.events)
+
+
+def test_supervisor_straggler_path():
+    clk = Clock()
+    em = ElasticMesh(pod=1, data=4, model=4, devices_per_host=4)
+    mon = HeartbeatMonitor(em.n_hosts, timeout_s=1e9, clock=clk)
+    sup = TrainingSupervisor(em, mon, ckpt_every=100)
+    pol = StragglerPolicy(threshold=1.5, patience=2)
+
+    def timings(step):
+        return {h: (4.0 if h == 2 and step < 10 else 1.0)
+                for h in range(em.n_hosts)}
+
+    rep = sup.run(20, lambda s, p: None, lambda s: None, lambda: 0,
+                  straggler=pol, timings_fn=timings)
+    assert 2 in pol.quarantined
+    assert rep.final_mesh == (3, 4)

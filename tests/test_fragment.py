@@ -1,0 +1,133 @@
+"""Tests for sketch fragments + subepoching (core/fragment.py)."""
+import numpy as np
+import pytest
+
+from repro.core import hashing as H
+from repro.core.fragment import (EpochRecords, FragmentConfig,
+                                 monitored_mask, packet_subepoch,
+                                 process_epoch, frag_seed, _ROLE_SUB)
+
+
+LOG2_TE = 12  # 4096 time units per epoch
+
+
+def test_packet_subepoch_bitslice():
+    n = 8
+    te = 1 << LOG2_TE
+    ts = np.arange(3 * te, dtype=np.int64)  # three epochs
+    sub = packet_subepoch(ts, 0, LOG2_TE, n)
+    # brute force: subepoch = (t mod Te) // (Te / n)
+    expect = ((ts % te) // (te // n)).astype(np.int32)
+    np.testing.assert_array_equal(sub, expect)
+
+
+def test_monitored_mask_single_subepoch_per_flow():
+    n = 8
+    keys = np.repeat(np.arange(100, dtype=np.uint32), n)
+    sub_pkt = np.tile(np.arange(n, dtype=np.int32), 100)
+    mask, sub_flow = monitored_mask(keys, sub_pkt, 77, n, None, False)
+    # each flow appears once per subepoch; exactly one is monitored
+    assert mask.reshape(100, n).sum(axis=1).tolist() == [1] * 100
+
+
+def test_mitigation_monitors_two_opposite_subepochs():
+    n = 8
+    keys = np.repeat(np.arange(100, dtype=np.uint32), n)
+    sub_pkt = np.tile(np.arange(n, dtype=np.int32), 100)
+    sh = np.ones(len(keys), dtype=bool)
+    mask, sub_flow = monitored_mask(keys, sub_pkt, 77, n, sh, True)
+    per_flow = mask.reshape(100, n)
+    assert per_flow.sum(axis=1).tolist() == [2] * 100
+    # the two monitored subepochs are n/2 apart
+    idx = np.argwhere(per_flow)
+    for f in range(100):
+        s = idx[idx[:, 0] == f][:, 1]
+        assert (s[1] - s[0]) % (n // 2) == 0
+
+
+def test_process_epoch_matches_bruteforce():
+    rng = np.random.RandomState(0)
+    n, w = 4, 64
+    P = 5000
+    keys = rng.randint(0, 500, P).astype(np.uint32)
+    vals = np.ones(P, dtype=np.int64)
+    ts = rng.randint(0, 1 << LOG2_TE, P).astype(np.int64)
+    cfg = FragmentConfig(frag_id=3, kind="cs", memory_bytes=w * 4)
+    rec = process_epoch(cfg, epoch=0, n=n, keys=keys, values=vals, ts=ts,
+                        epoch_start=0, log2_te=LOG2_TE)
+    assert rec.counters.shape == (n, w)
+    col_seed, sign_seed, sub_seed = rec.seeds()
+    expect = np.zeros((n, w), dtype=np.int64)
+    for i in range(P):
+        sp = int(packet_subepoch(ts[i:i+1], 0, LOG2_TE, n)[0])
+        sf = int(H.hash_pow2(keys[i:i+1], sub_seed, n)[0])
+        if sp != sf:
+            continue
+        c = int(H.hash_mod(keys[i:i+1], col_seed, w)[0])
+        s = int(H.hash_sign(keys[i:i+1], sign_seed)[0])
+        expect[sp, c] += s
+    np.testing.assert_array_equal(rec.counters, expect)
+
+
+def test_total_mass_conservation_cms():
+    """CMS fragment: counter mass == number of monitored packets."""
+    rng = np.random.RandomState(1)
+    P = 20000
+    keys = rng.randint(0, 1000, P).astype(np.uint32)
+    ts = rng.randint(0, 1 << LOG2_TE, P).astype(np.int64)
+    cfg = FragmentConfig(frag_id=1, kind="cms", memory_bytes=256)
+    for n in [1, 2, 8]:
+        rec = process_epoch(cfg, 0, n, keys, np.ones(P, np.int64), ts,
+                            0, LOG2_TE)
+        _, _, sub_seed = rec.seeds()
+        sub_pkt = packet_subepoch(ts, 0, LOG2_TE, n)
+        mask, _ = monitored_mask(keys, sub_pkt, sub_seed, n, None, False)
+        assert rec.counters.sum() == mask.sum()
+        if n == 1:
+            assert mask.all()  # n=1 monitors everything
+
+
+def test_um_fragment_levels_subsample():
+    rng = np.random.RandomState(2)
+    P = 30000
+    keys = rng.randint(0, 3000, P).astype(np.uint32)
+    ts = rng.randint(0, 1 << LOG2_TE, P).astype(np.int64)
+    cfg = FragmentConfig(frag_id=2, kind="um", memory_bytes=16 * 64 * 4,
+                         n_levels=8)
+    rec = process_epoch(cfg, 0, 1, keys, np.ones(P, np.int64), ts,
+                        0, LOG2_TE)
+    assert rec.counters.shape[0] == 8
+    mass = np.abs(rec.counters).sum(axis=(1, 2)).astype(np.float64)
+    # level masses decay ~geometrically (level l sees ~2^-l of the stream)
+    assert mass[0] > 0
+    for l in range(1, 5):
+        assert mass[l] < mass[l - 1] * 0.8 + 16
+
+
+def test_epoch_seeds_change():
+    cfg = FragmentConfig(frag_id=5, kind="cs", memory_bytes=256)
+    keys = np.arange(100, dtype=np.uint32)
+    ts = np.zeros(100, dtype=np.int64)
+    r0 = process_epoch(cfg, 0, 4, keys, np.ones(100, np.int64), ts, 0,
+                       LOG2_TE)
+    r1 = process_epoch(cfg, 1, 4, keys, np.ones(100, np.int64), ts, 0,
+                       LOG2_TE)
+    assert r0.seeds() != r1.seeds()  # "replace their hash functions"
+
+
+def test_delta_export_equals_reset():
+    """§5: no-reset cumulative counters + controller-side deltas must
+    reproduce reset-mode records exactly, across multiple epochs."""
+    from repro.core.fragment import CumulativeFragment
+    rng = np.random.RandomState(0)
+    cfg = FragmentConfig(frag_id=1, kind="cs", memory_bytes=512)
+    cf = CumulativeFragment(cfg)
+    for e in range(3):
+        keys = rng.randint(0, 200, 3000).astype(np.uint32)
+        ts = (rng.randint(0, 1 << LOG2_TE, 3000)
+              + (e << LOG2_TE)).astype(np.int64)
+        vals = np.ones(3000, np.int64)
+        rec_delta = cf.export_epoch(e, 4, keys, vals, ts, 0, LOG2_TE)
+        rec_reset = process_epoch(cfg, e, 4, keys, vals, ts, 0, LOG2_TE)
+        np.testing.assert_array_equal(rec_delta.counters,
+                                      rec_reset.counters)

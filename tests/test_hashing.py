@@ -1,0 +1,67 @@
+"""Unit tests for the universal hash families (core/hashing.py)."""
+import numpy as np
+import pytest
+
+from repro.core import hashing as H
+
+
+def test_mix32_bijective_sample():
+    x = np.arange(100000, dtype=np.uint32)
+    y = H.mix32(x)
+    assert len(np.unique(y)) == len(x)  # injective on the sample
+
+
+def test_hash_mod_range_and_uniformity():
+    keys = np.arange(200000, dtype=np.uint32)
+    for mod in [7, 64, 513, 4096, 100003]:
+        h = H.hash_mod(keys, seed=3, mod=mod)
+        assert h.min() >= 0 and h.max() < mod
+        counts = np.bincount(h, minlength=mod)
+        expected = len(keys) / mod
+        # chi-square-ish sanity: no bucket more than 5x expected
+        assert counts.max() < 5 * expected + 16
+
+
+def test_hash_pow2_matches_mask():
+    keys = np.arange(5000, dtype=np.uint32)
+    h = H.hash_pow2(keys, seed=9, n=8)
+    assert h.min() >= 0 and h.max() < 8
+    h2 = H.hash_u32(keys, 9) & np.uint32(7)
+    np.testing.assert_array_equal(h, h2.astype(np.int32))
+
+
+def test_hash_sign_balance():
+    keys = np.arange(100000, dtype=np.uint32)
+    s = H.hash_sign(keys, seed=11)
+    assert set(np.unique(s)) == {-1, 1}
+    assert abs(s.astype(np.float64).mean()) < 0.01
+
+
+def test_seeds_decorrelate():
+    keys = np.arange(10000, dtype=np.uint32)
+    a = H.hash_mod(keys, 1, 1024)
+    b = H.hash_mod(keys, 2, 1024)
+    assert (a == b).mean() < 0.01  # collision rate ~ 1/1024
+
+
+def test_level_of_geometric():
+    keys = np.arange(1 << 18, dtype=np.uint32)
+    lvl = H.level_of(keys, seed=5, n_levels=16)
+    assert lvl.min() >= 0 and lvl.max() < 16
+    frac = np.bincount(lvl, minlength=16) / len(keys)
+    # level l has probability ~2^-(l+1) (last level absorbs the tail)
+    for l in range(6):
+        assert abs(frac[l] - 2.0 ** -(l + 1)) < 0.01
+
+
+def test_jnp_backend_matches_numpy():
+    import jax.numpy as jnp
+    keys = np.arange(4096, dtype=np.uint32)
+    for fn, args in [(H.mix32, ()), (H.hash_u32, (7,)),
+                     (H.hash_sign, (13,))]:
+        a = fn(keys, *args, xp=np)
+        b = np.asarray(fn(jnp.asarray(keys), *args, xp=jnp))
+        np.testing.assert_array_equal(np.asarray(a), b)
+    a = H.hash_mod(keys, 7, 1000, xp=np)
+    b = np.asarray(H.hash_mod(jnp.asarray(keys), 7, 1000, xp=jnp))
+    np.testing.assert_array_equal(a, b)

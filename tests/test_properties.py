@@ -1,0 +1,123 @@
+"""Hypothesis property-based tests for the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+from repro.core import sketches as S
+from repro.core import query as Q
+from repro.core.equalize import next_n, peb_row
+from repro.core.fragment import (FragmentConfig, packet_subepoch,
+                                 process_epoch)
+
+LOG2_TE = 10
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**31 - 1),
+       st.sampled_from([1, 2, 4, 8, 16, 64]))
+def test_hash_pow2_in_range(key, seed, n):
+    h = int(H.hash_pow2(np.array([key], np.uint32), seed, n)[0])
+    assert 0 <= h < n
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 100000))
+def test_hash_mod_in_range(seed, mod):
+    keys = np.arange(64, dtype=np.uint32) * np.uint32(2654435769)
+    h = H.hash_mod(keys, seed, mod)
+    assert (h >= 0).all() and (h < mod).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.tuples(st.integers(1, 1000), st.integers(1, 500)),
+                min_size=1, max_size=50, unique_by=lambda t: t[0]),
+       st.integers(0, 1000))
+def test_cms_point_query_overestimates(flows, seed):
+    """CMS invariant: estimate >= true count, for ANY stream."""
+    keys = np.array([k for k, _ in flows], np.uint32)
+    vals = np.array([v for _, v in flows], np.int64)
+    spec = S.SketchSpec("cms", depth=3, width=32, seed=seed)
+    c = S.update(spec, S.make_counters(spec), keys, vals)
+    est = S.query(spec, c, keys)
+    assert (est >= vals - 1e-9).all()
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.tuples(st.integers(1, 1000), st.integers(1, 500)),
+                min_size=1, max_size=50, unique_by=lambda t: t[0]),
+       st.integers(0, 1000))
+def test_sketch_linearity_property(flows, seed):
+    """sketch(A) + sketch(B) == sketch(A + B) for any split."""
+    keys = np.array([k for k, _ in flows], np.uint32)
+    vals = np.array([v for _, v in flows], np.int64)
+    spec = S.SketchSpec("cs", depth=3, width=16, seed=seed)
+    cut = len(keys) // 2
+    a = S.update(spec, S.make_counters(spec), keys[:cut], vals[:cut])
+    b = S.update(spec, S.make_counters(spec), keys[cut:], vals[cut:])
+    ab = S.update(spec, S.make_counters(spec), keys, vals)
+    np.testing.assert_array_equal(a + b, ab)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**20), st.sampled_from([1, 2, 4, 8, 16]))
+def test_subepoch_bitslice_property(ts, n):
+    """Method 2 bit-slice == arithmetic (t mod Te) // (Te/n), any t, n."""
+    te = 1 << LOG2_TE
+    got = int(packet_subepoch(np.array([ts], np.int64), 0, LOG2_TE, n)[0])
+    assert got == (ts % te) // (te // n)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 512), st.floats(1e-3, 1e6), st.floats(1e-3, 1e6))
+def test_next_n_moves_toward_target(n, peb, target):
+    """Eq. 6 monotonicity: n grows iff error is too high, shrinks iff
+    too low, and always stays a power of two in [1, N_MAX]."""
+    n = 1 << (n.bit_length() - 1)  # snap to power of two
+    n2 = next_n(n, peb, target)
+    assert n2 & (n2 - 1) == 0
+    if peb > 2 * target:
+        assert n2 >= n
+    elif peb < target / 2:
+        assert n2 <= n
+    else:
+        assert n2 == n
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 100), st.sampled_from([1, 2, 4, 8]),
+       st.integers(1, 6))
+def test_query_epoch_mass_conservation(seed, n, n_frag):
+    """For a uniform-rate flow and CMS fragments with no collisions, the
+    composite epoch estimate equals the true count regardless of the
+    (n, fragment-count) combination."""
+    rng = np.random.RandomState(seed)
+    true = 1 << LOG2_TE  # one packet per time unit
+    keys = np.full(true, 12345, np.uint32)
+    vals = np.ones(true, np.int64)
+    ts = np.arange(true, dtype=np.int64)
+    recs = []
+    for f in range(n_frag):
+        cfg = FragmentConfig(frag_id=f, kind="cms",
+                             memory_bytes=4 * 1024)
+        recs.append(process_epoch(cfg, 0, n, keys, vals, ts, 0, LOG2_TE))
+    est = Q.query_epoch(recs, np.array([12345], np.uint32), "cms")
+    assert est[0] == pytest.approx(true, rel=1e-9)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=64),
+       st.sampled_from(["cs", "cms"]))
+def test_peb_row_nonnegative_and_scale(counters, kind):
+    c = np.array(counters, np.int64)
+    rho = peb_row(c, kind)
+    assert rho >= 0
+    # doubling all counters doubles the PEB (both norms are 1-homogeneous)
+    assert peb_row(2 * c, kind) == pytest.approx(2 * rho, rel=1e-9)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 2**31 - 1))
+def test_synthetic_data_in_vocab(seed):
+    from repro.data.pipeline import SyntheticLM
+    d = SyntheticLM(vocab=777, seq_len=8, batch_per_host=2, seed=seed)
+    b = d.batch(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 777

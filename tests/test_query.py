@@ -1,0 +1,128 @@
+"""Tests for central querying (core/query.py): normalization, blind-spot
+fill, merging, mitigation."""
+import numpy as np
+import pytest
+
+from repro.core import hashing as H
+from repro.core import query as Q
+from repro.core.fragment import (EpochRecords, FragmentConfig,
+                                 process_epoch)
+
+LOG2_TE = 12
+
+
+def _uniform_flow_epoch(n_pkts=4096, key=42):
+    """One flow sending one packet per time unit (perfectly uniform)."""
+    keys = np.full(n_pkts, key, dtype=np.uint32)
+    ts = np.arange(n_pkts, dtype=np.int64)
+    return keys, np.ones(n_pkts, np.int64), ts
+
+
+def test_single_record_extrapolation_exact_for_uniform_flow():
+    """A uniform flow monitored in 1 of n subepochs must extrapolate to
+    ~exactly its true epoch count (the §4.3 blind-spot fill)."""
+    keys, vals, ts = _uniform_flow_epoch()
+    cfg = FragmentConfig(frag_id=0, kind="cms", memory_bytes=4096)
+    for n in [1, 2, 4, 8]:
+        rec = process_epoch(cfg, 0, n, keys, vals, ts, 0, LOG2_TE)
+        est = Q.query_epoch([rec], np.array([42], np.uint32), "cms")
+        assert est[0] == pytest.approx(4096, rel=1e-6)
+
+
+def test_blind_spot_fill_uses_mean():
+    """Two records with different subepochs: covered slots use real data,
+    blind slots get the mean of covered slots."""
+    w, n = 64, 4
+    # handcraft records: fragment measured value 8 in its subepoch
+    counters = np.zeros((n, w), np.int64)
+    key = np.array([7], np.uint32)
+    rec = EpochRecords(1, 0, n, counters, "cms", False)
+    _, _, sub_seed = rec.seeds()
+    col_seed = rec.seeds()[0]
+    sub = int(H.hash_pow2(key, sub_seed, n)[0])
+    col = int(H.hash_mod(key, col_seed, w)[0])
+    counters[sub, col] = 8
+    est = Q.query_epoch([rec], key, "cms")
+    # 1 covered slot = 8, 3 blind slots filled with mean (8) -> sum 32
+    assert est[0] == pytest.approx(32.0)
+
+
+def test_normalization_across_different_n():
+    """records with n=1 and n=4 normalize into n_m=4 slots."""
+    w = 64
+    key = np.array([9], np.uint32)
+    # full-epoch record (n=1) measuring 40
+    c1 = np.zeros((1, w), np.int64)
+    r1 = EpochRecords(1, 0, 1, c1, "cms", False)
+    col1 = int(H.hash_mod(key, r1.seeds()[0], w)[0])
+    c1[0, col1] = 40
+    # quarter-epoch record (n=4) measuring 10 in its subepoch
+    c4 = np.zeros((4, w), np.int64)
+    r4 = EpochRecords(2, 0, 4, c4, "cms", False)
+    sub4 = int(H.hash_pow2(key, r4.seeds()[2], 4)[0])
+    col4 = int(H.hash_mod(key, r4.seeds()[0], w)[0])
+    c4[sub4, col4] = 10
+    est = Q.query_epoch([r1, r4], key, "cms")
+    # r1 contributes 10 per slot; r4 contributes 10 in its slot; min = 10
+    # per covered slot; blind fill = 10 -> total 40.
+    assert est[0] == pytest.approx(40.0)
+
+
+def test_min_merge_for_cms_median_for_cs():
+    w = 64
+    key = np.array([5], np.uint32)
+    recs = []
+    for fid, val in [(1, 30), (2, 10), (3, 20)]:
+        c = np.zeros((1, w), np.int64)
+        r = EpochRecords(fid, 0, 1, c, "cms", False)
+        c[0, int(H.hash_mod(key, r.seeds()[0], w)[0])] = val
+        recs.append(r)
+    est = Q.query_epoch(recs, key, "cms")
+    assert est[0] == pytest.approx(10.0)  # min
+    recs_cs = []
+    for fid, val in [(1, 30), (2, 10), (3, 20)]:
+        c = np.zeros((1, w), np.int64)
+        r = EpochRecords(fid, 0, 1, c, "cs", False)
+        sgn = int(H.hash_sign(key, r.seeds()[1])[0])
+        c[0, int(H.hash_mod(key, r.seeds()[0], w)[0])] = val * sgn
+        recs_cs.append(r)
+    est = Q.query_epoch(recs_cs, key, "cs")
+    assert est[0] == pytest.approx(20.0)  # median
+
+
+def test_query_window_sums_epochs():
+    keys = np.full(1024, 42, dtype=np.uint32)
+    vals = np.ones(1024, np.int64)
+    ts = np.arange(1024, dtype=np.int64) * 4   # uniform over the epoch
+    cfg = FragmentConfig(frag_id=0, kind="cms", memory_bytes=4096)
+    recs_by_epoch = []
+    for e in range(3):
+        rec = process_epoch(cfg, e, 2, keys, vals,
+                            ts + (e << LOG2_TE), 0, LOG2_TE)
+        recs_by_epoch.append([rec])
+    est = Q.query_window(recs_by_epoch, np.array([42], np.uint32), "cms")
+    assert est[0] == pytest.approx(3 * 1024, rel=1e-6)
+
+
+def test_mitigation_second_record_used():
+    """§4.4: single-hop flows read two subepoch records."""
+    keys, vals, ts = _uniform_flow_epoch()
+    cfg = FragmentConfig(frag_id=0, kind="cms", memory_bytes=4096,
+                         mitigation=True)
+    rec = process_epoch(cfg, 0, 4, keys, vals, ts, 0, LOG2_TE,
+                        single_hop=np.ones(len(keys), bool))
+    est = Q.query_epoch([rec], np.array([42], np.uint32), "cms",
+                        single_hop=np.array([True]))
+    # two covered slots of 1024 each + 2 blind -> still ~4096 total
+    assert est[0] == pytest.approx(4096, rel=1e-6)
+    # the fragment tracked the flow in TWO subepochs:
+    assert (rec.counters.sum(axis=1) > 0).sum() == 2
+
+
+def test_merge_fragment_mode():
+    keys, vals, ts = _uniform_flow_epoch()
+    cfg = FragmentConfig(frag_id=0, kind="cms", memory_bytes=4096)
+    rec = process_epoch(cfg, 0, 4, keys, vals, ts, 0, LOG2_TE)
+    est = Q.query_epoch([rec], np.array([42], np.uint32), "cms",
+                        merge="fragment")
+    assert est[0] == pytest.approx(4096, rel=1e-6)

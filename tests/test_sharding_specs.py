@@ -1,0 +1,103 @@
+"""Sharding-spec tests: every parameter/cache spec must evenly divide its
+array on both production meshes (AbstractMesh — no devices needed)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.launch import shardings as SH
+from repro.models import model as MDL
+
+MESHES = {
+    "single": AbstractMesh((16, 16), ("data", "model")),
+    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def _check_tree(specs, shapes, mesh, where):
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_a = jax.tree.leaves(shapes)
+    assert len(flat_s) == len(flat_a)
+    for spec, arr in zip(flat_s, flat_a):
+        shape = arr.shape if hasattr(arr, "shape") else np.shape(arr)
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            prod = int(np.prod([mesh.shape[a] for a in names]))
+            assert shape[dim] % prod == 0, \
+                f"{where}: dim {dim} of {shape} not divisible by " \
+                f"{prod} ({spec})"
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", list_configs())
+def test_param_specs_divide(arch, mesh_name):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    params = jax.eval_shape(
+        lambda: MDL.init_params(jax.random.PRNGKey(0), cfg,
+                                dtype=jnp.bfloat16))
+    specs = SH.param_specs(params, cfg, mesh, fsdp=True)
+    _check_tree(specs, params, mesh, f"{arch}/{mesh_name}")
+
+
+@pytest.mark.parametrize("arch", list_configs())
+def test_param_tp_actually_shards_big_leaves(arch):
+    """On the single-pod mesh, the big weights must not be replicated:
+    per-device bytes must be <= total/16 x 1.5 slack."""
+    cfg = get_config(arch)
+    mesh = MESHES["single"]
+    params = jax.eval_shape(
+        lambda: MDL.init_params(jax.random.PRNGKey(0), cfg,
+                                dtype=jnp.bfloat16))
+    specs = SH.param_specs(params, cfg, mesh, fsdp=True)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_a = jax.tree.leaves(params)
+    total = sum(int(np.prod(a.shape)) * 2 for a in flat_a)
+    per_dev = 0
+    for spec, arr in zip(flat_s, flat_a):
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            shards *= int(np.prod([mesh.shape[a] for a in names]))
+        per_dev += int(np.prod(arr.shape)) * 2 // shards
+    assert per_dev <= total / 256 * 4, \
+        f"{arch}: per-device param bytes {per_dev/2**20:.0f}MiB vs " \
+        f"total {total/2**20:.0f}MiB — sharding too weak"
+    # absolute HBM sanity: fits a 16 GB chip with f32 moments (~5x bf16)
+    assert per_dev * 5 < 16 * 2 ** 30
+
+
+@pytest.mark.parametrize("mesh_name", list(MESHES))
+@pytest.mark.parametrize("arch", ["granite-8b", "gemma2-2b",
+                                  "falcon-mamba-7b", "zamba2-2.7b"])
+def test_decode_state_specs_divide(arch, mesh_name):
+    cfg = get_config(arch)
+    mesh = MESHES[mesh_name]
+    for shape_name in ("decode_32k", "long_500k"):
+        if shape_name == "long_500k" and arch not in (
+                "falcon-mamba-7b", "zamba2-2.7b"):
+            continue
+        shp = SHAPES[shape_name]
+        state = jax.eval_shape(
+            lambda: MDL.init_decode_state(None, cfg, shp.global_batch,
+                                          shp.seq_len))
+        specs = SH.decode_state_specs(cfg, shp.global_batch, mesh,
+                                      seq_shard=shape_name == "long_500k")
+        _check_tree(specs.caches, state.caches, mesh,
+                    f"{arch}/{shape_name}/{mesh_name}")
+
+
+def test_kv_spec_prefers_heads_then_dhead():
+    cfg_kv = get_config("codeqwen1.5-7b")   # kv=32 divisible
+    mesh = MESHES["single"]
+    spec = SH.kv_cache_spec(cfg_kv, 128, mesh)
+    assert spec[2] == "model"
+    cfg_dh = get_config("granite-8b")       # kv=8 -> shard d_head=128
+    spec = SH.kv_cache_spec(cfg_dh, 128, mesh)
+    assert spec[2] is None and spec[3] == "model"

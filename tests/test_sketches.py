@@ -1,0 +1,68 @@
+"""Unit tests for the aggregated sketches (core/sketches.py)."""
+import numpy as np
+import pytest
+
+from repro.core import sketches as S
+
+
+def _stream(n_flows=2000, total=20000, seed=0):
+    rng = np.random.RandomState(seed)
+    ranks = np.arange(1, n_flows + 1, dtype=np.float64)
+    p = ranks ** -1.1
+    p /= p.sum()
+    sizes = np.maximum(1, (p * total).astype(np.int64))
+    keys = (rng.permutation(n_flows).astype(np.uint32) * np.uint32(2654435769))
+    return keys, sizes
+
+
+def test_cms_never_underestimates():
+    keys, sizes = _stream()
+    spec = S.SketchSpec("cms", depth=4, width=512, seed=1)
+    c = S.update(spec, S.make_counters(spec), keys, sizes)
+    est = S.query(spec, c, keys)
+    assert (est >= sizes - 1e-9).all()
+
+
+def test_cms_error_bound():
+    keys, sizes = _stream()
+    spec = S.SketchSpec("cms", depth=4, width=2048, seed=2)
+    c = S.update(spec, S.make_counters(spec), keys, sizes)
+    est = S.query(spec, c, keys)
+    # standard CM guarantee: err <= 2*V/w w.p. >= 1 - 2^-depth per key
+    bound = 2.0 * sizes.sum() / spec.width
+    frac_bad = ((est - sizes) > bound).mean()
+    assert frac_bad < 0.1
+
+
+def test_cs_small_bias_and_rmse():
+    keys, sizes = _stream()
+    spec = S.SketchSpec("cs", depth=5, width=2048, seed=3)
+    c = S.update(spec, S.make_counters(spec), keys, sizes)
+    est = S.query(spec, c, keys)
+    err = est - sizes
+    assert abs(err.mean()) < 2.0          # ~unbiased
+    assert np.sqrt((err ** 2).mean()) < np.sqrt(
+        (sizes ** 2).sum() / spec.width) * 3
+
+
+def test_sketch_linearity():
+    keys, sizes = _stream()
+    half = len(keys) // 2
+    spec = S.SketchSpec("cs", depth=3, width=256, seed=4)
+    c_all = S.update(spec, S.make_counters(spec), keys, sizes)
+    c_a = S.update(spec, S.make_counters(spec), keys[:half], sizes[:half])
+    c_b = S.update(spec, S.make_counters(spec), keys[half:], sizes[half:])
+    np.testing.assert_array_equal(c_all, c_a + c_b)
+
+
+def test_univmon_freq_and_entropy():
+    keys, sizes = _stream(n_flows=5000, total=100000)
+    spec = S.UnivMonSpec(depth=5, width=4096, n_levels=12, seed=5)
+    c = S.um_update(spec, S.um_make_counters(spec), keys, sizes)
+    est = S.um_query_freq(spec, c, keys)
+    heavy = sizes > np.percentile(sizes, 99)
+    rel = np.abs(est[heavy] - sizes[heavy]) / sizes[heavy]
+    assert np.median(rel) < 0.2
+    ent = S.um_entropy(spec, c, keys, float(sizes.sum()))
+    true = S.true_entropy(sizes)
+    assert abs(ent - true) / true < 0.15

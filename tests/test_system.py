@@ -1,0 +1,136 @@
+"""End-to-end behaviour tests of the paper's system (DiSketch vs DISCO vs
+aggregated) on simulated topologies — the paper's qualitative claims at
+test scale."""
+import numpy as np
+import pytest
+
+from repro.core.disketch import (AggregatedSystem, DiSketchSystem,
+                                 DiscoSystem, calibrate_rho_target)
+from repro.net.simulator import Replayer, nrmse, rmse
+from repro.net.topology import FatTree, SpineLeaf, core_on_path
+from repro.net.traffic import cov_list, gen_workload, gini_memories, \
+    linear_path_workload
+
+
+@pytest.fixture(scope="module")
+def fat_tree_wl():
+    topo = FatTree(4)
+    wl = gen_workload(topo, n_flows=8000, total_packets=80000, n_epochs=8,
+                      burstiness=0.2, seed=11)
+    return topo, wl, Replayer(wl, topo.n_switches)
+
+
+def test_topology_path_lengths(fat_tree_wl):
+    topo, wl, _ = fat_tree_wl
+    pl = wl.path_len
+    assert set(np.unique(pl)) <= {1, 3, 5}
+    assert (pl == 5).sum() > 0  # cross-pod traffic exists
+
+
+def test_disketch_runs_and_queries(fat_tree_wl):
+    topo, wl, rep = fat_tree_wl
+    mems = {sw: 8 * 1024 for sw in range(topo.n_switches)}
+    sysd = DiSketchSystem(mems, "cms", rho_target=8.0, log2_te=wl.log2_te)
+    rep.run(sysd)
+    sel = wl.path_len == 5
+    est = sysd.query_flows(wl.keys[sel],
+                           [p for p, s in zip(wl.paths, sel) if s],
+                           list(range(wl.n_epochs)))
+    truth = wl.sizes[sel]
+    assert nrmse(est, truth, wl.sizes.sum()) < 0.01
+    # correlation with the truth should be strong
+    r = np.corrcoef(est, truth)[0, 1]
+    assert r > 0.9
+
+
+def test_disketch_beats_disco_under_heterogeneity():
+    """Fig. 14's diagonal: extreme width heterogeneity, 5-hop path."""
+    rng = np.random.RandomState(5)
+    widths = np.maximum(cov_list(5, 5120, 1.8, rng).astype(int), 4)
+    loads = np.maximum(cov_list(5, 200_000, 0.9, rng).astype(int), 16)
+    wl = linear_path_workload(5, eval_flows=250, eval_packets=2200,
+                              bg_packets_per_hop=loads, n_epochs=16,
+                              burstiness=0.2, seed=6)
+    rep = Replayer(wl, 5)
+    mems = {h: int(widths[h]) * 4 for h in range(5)}
+    sel = wl.path_len == 5
+    keys, truth = wl.keys[sel], wl.sizes[sel]
+    paths = [tuple(range(5))] * len(keys)
+    epochs = list(range(wl.n_epochs))
+    rho = calibrate_rho_target(mems, "cs",
+                               rep.epoch_stream(wl.n_epochs // 2),
+                               wl.log2_te)
+    sysd = DiSketchSystem(mems, "cs", rho_target=rho, log2_te=wl.log2_te)
+    rep.run(sysd)
+    e_dis = rmse(sysd.query_flows(keys, paths, epochs), truth)
+    disco = DiscoSystem(mems, "cs", rho_target=0, log2_te=wl.log2_te)
+    rep.run(disco)
+    e_disco = rmse(disco.query_flows(keys, paths, epochs), truth)
+    assert e_dis < e_disco, (e_dis, e_disco)
+    # fragments actually adapted
+    assert max(sysd.ns.values()) > 1
+
+
+def test_disaggregated_beats_aggregated(fat_tree_wl):
+    """§6.1: disaggregated >> aggregated at equal per-switch memory."""
+    topo, wl, rep = fat_tree_wl
+    mem = 4 * 1024
+    mems = {sw: mem for sw in range(topo.n_switches)}
+    sel = wl.path_len == 5
+    keys, truth = wl.keys[sel], wl.sizes[sel]
+    paths = [p for p, s in zip(wl.paths, sel) if s]
+    epochs = list(range(wl.n_epochs))
+    disco = DiscoSystem(mems, "cs", rho_target=0, log2_te=wl.log2_te)
+    rep.run(disco)
+    e_disagg = rmse(disco.query_flows(keys, paths, epochs), truth)
+    agg = AggregatedSystem({sw: mem for sw in topo.core_ids}, "cs",
+                           depth=4)
+    rep.run(agg)
+    core = core_on_path(wl.path_mat[sel], topo.core_ids)
+    e_agg = rmse(agg.query_flows(keys, core, epochs), truth)
+    assert e_disagg < e_agg
+
+
+def test_equalization_converges_n(fat_tree_wl):
+    """Eq. 6 loop: under a tight target, heavily-loaded fragments raise n
+    and their PEB approaches the target band."""
+    topo, wl, rep = fat_tree_wl
+    mems = {sw: 2 * 1024 for sw in range(topo.n_switches)}
+    rho = 2.0
+    sysd = DiSketchSystem(mems, "cs", rho_target=rho, log2_te=wl.log2_te)
+    rep.run(sysd)
+    # after convergence the last-epoch PEBs sit in [rho/2, 2*rho] mostly
+    last = sysd.peb_log[-1]
+    in_band = [rho / 2 <= p <= 2 * rho for p in last.values() if p > 0]
+    assert np.mean(in_band) > 0.6
+    assert max(sysd.ns.values()) > 1
+
+
+def test_spineleaf_runs():
+    topo = SpineLeaf()
+    wl = gen_workload(topo, n_flows=2000, total_packets=20000, n_epochs=4,
+                      seed=3)
+    rep = Replayer(wl, topo.n_switches)
+    mems = {sw: 4 * 1024 for sw in range(topo.n_switches)}
+    sysd = DiSketchSystem(mems, "cms", rho_target=10.0,
+                          log2_te=wl.log2_te)
+    rep.run(sysd)
+    sel = wl.path_len == 3
+    est = sysd.query_flows(wl.keys[sel],
+                           [p for p, s in zip(wl.paths, sel) if s],
+                           list(range(wl.n_epochs)))
+    assert np.corrcoef(est, wl.sizes[sel])[0, 1] > 0.8
+
+
+def test_univmon_entropy_network_wide(fat_tree_wl):
+    topo, wl, rep = fat_tree_wl
+    mems = {sw: 64 * 1024 for sw in range(topo.n_switches)}
+    sysd = DiSketchSystem(mems, "um", rho_target=50.0,
+                          log2_te=wl.log2_te, n_levels=8)
+    rep.run(sysd)
+    from repro.core.sketches import true_entropy
+    ent = sysd.query_entropy(wl.keys, wl.paths,
+                             list(range(wl.n_epochs)),
+                             float(wl.sizes.sum()), n_levels=8)
+    true = true_entropy(wl.sizes)
+    assert abs(ent - true) / true < 0.25
