@@ -64,6 +64,76 @@ def run(quick: bool = True):
                 t_ref.s / 3 / (p / 1000) * 1e6, 1),
         })
     emit("kernel_bench", rows)
+    rows += run_fleet(quick=quick)
+    return rows
+
+
+def run_fleet(quick: bool = True):
+    """Fleet engine vs per-fragment loop: one batched dispatch for all
+    fragments against one ``sketch_update`` pallas_call per fragment.
+
+    Wall-time is CPU interpret-mode, so the absolute packets/sec is not
+    the TPU number — but the *ratio* exposes the dispatch/serialization
+    overhead the fleet path removes, and the equality check proves the
+    batched path is a drop-in replacement.
+    """
+    import jax.numpy as jnp
+    from repro.kernels.sketch_update import fleet as FK
+
+    rng = np.random.RandomState(1)
+    n_frags = 4 if quick else 8
+    p = 1 << (12 if quick else 14)
+    widths = [512, 2048, 1024, 4096, 256, 2048, 512, 1024][:n_frags]
+    nsubs = [4, 8, 2, 16, 1, 8, 4, 2][:n_frags]
+    keys = rng.randint(0, 1 << 20, (n_frags, p)).astype(np.uint32)
+    vals = np.ones((n_frags, p), np.float32)
+    ts = rng.randint(0, 1 << 16, (n_frags, p)).astype(np.uint32)
+    params = np.zeros((n_frags, FK.N_PARAMS), np.int32)
+    for f in range(n_frags):
+        params[f, FK.PARAM_COL_SEED] = 101 + f
+        params[f, FK.PARAM_SIGN_SEED] = 202 + f
+        params[f, FK.PARAM_SUB_SEED] = 303 + f
+        params[f, FK.PARAM_WIDTH] = widths[f]
+        params[f, FK.PARAM_N_SUB] = nsubs[f]
+        params[f, FK.PARAM_LOG2_N_SUB] = nsubs[f].bit_length() - 1
+    kw = dict(n_sub_max=max(nsubs), width_max=max(widths), log2_te=16,
+              signed=True)
+    blk, w_blk = 1024, 2048
+    kj, vj, tj = jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(ts)
+    pj = jnp.asarray(params)
+
+    out_fleet = np.asarray(FK.fleet_update(kj, vj, tj, pj, blk=blk,
+                                           w_blk=w_blk, interpret=True,
+                                           **kw))
+    with Timer() as t_fleet:
+        FK.fleet_update(kj, vj, tj, pj, blk=blk, w_blk=w_blk,
+                        interpret=True, **kw).block_until_ready()
+    out_loop = FK.fleet_update_loop(keys, vals, ts, params,
+                                    backend="pallas", interpret=True,
+                                    blk=blk, w_blk=w_blk, **kw)
+    with Timer() as t_loop:
+        FK.fleet_update_loop(keys, vals, ts, params, backend="pallas",
+                             interpret=True, blk=blk, w_blk=w_blk, **kw)
+    total_pkts = n_frags * p
+    # Interpret-mode caveat: the fleet pays its padding (every fragment
+    # processed at width_max x n_sub_max) at full cost on CPU, while on
+    # TPU the MXU absorbs it and the loop instead pays n_frags dispatches.
+    # pad_work_x quantifies that padding factor.
+    live = sum(w * n for w, n in zip(widths, nsubs))
+    pad_work_x = n_frags * max(widths) * max(nsubs) / live
+    rows = [{
+        "bench": "fleet_vs_loop",
+        "n_frags": n_frags,
+        "pkts_per_frag": p,
+        "fleet_matches_loop": bool(np.array_equal(out_fleet, out_loop)),
+        "fleet_pkts_per_s": round(total_pkts / t_fleet.s),
+        "loop_pkts_per_s": round(total_pkts / t_loop.s),
+        "fleet_speedup_x": round(t_loop.s / t_fleet.s, 2),
+        "pad_work_x": round(pad_work_x, 2),
+        "device_dispatches_fleet": 1,
+        "device_dispatches_loop": n_frags,
+    }]
+    emit("kernel_bench_fleet", rows)
     return rows
 
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 gate: the suite must *collect* cleanly (a collection error hides
+# every test in the module) and the fast selection must pass.
+# Usage: scripts/check.sh [--install]   (--install pip-installs dev deps)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--install" ]]; then
+    pip install -r requirements-dev.txt
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== collection check (all modules, including slow) =="
+python -m pytest -q -m "" --collect-only >/dev/null
+
+echo "== tier-1 tests =="
+python -m pytest -x -q

@@ -31,14 +31,26 @@ class SwitchStream:
 
 
 class DiSketchSystem:
-    """The paper's system: spatiotemporally disaggregated sketching."""
+    """The paper's system: spatiotemporally disaggregated sketching.
+
+    ``backend`` selects the epoch execution engine:
+      * ``"loop"`` (default) — per-switch numpy fragments, one
+        ``process_epoch`` per switch (supports every kind + §4.4
+        mitigation);
+      * ``"fleet"`` — one batched Pallas dispatch updates all fragments
+        (``core.fleet.FleetEpochRunner``); bit-identical counters for
+        cs/cms without mitigation.  ``fleet_kwargs`` are forwarded to the
+        runner (blk, w_blk, interpret, keep_stacked).
+    """
 
     name = "disketch"
     subepoching = True
 
     def __init__(self, switch_memories: Dict[int, int], kind: str,
                  rho_target: float, log2_te: int, counter_bytes: int = 4,
-                 mitigation: bool = False, n_levels: int = 16, seed: int = 0):
+                 mitigation: bool = False, n_levels: int = 16, seed: int = 0,
+                 backend: str = "loop",
+                 fleet_kwargs: Optional[Dict] = None):
         self.kind = kind
         self.rho_target = rho_target
         self.log2_te = log2_te
@@ -54,8 +66,38 @@ class DiSketchSystem:
         self.records: Dict[int, Dict[int, EpochRecords]] = {}  # epoch -> sw
         self.peb_log: List[Dict[int, float]] = []
         self.n_log: List[Dict[int, int]] = []
+        if backend not in ("loop", "fleet"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.backend = backend
+        self.fleet: Optional["FleetEpochRunner"] = None
+        if backend == "fleet":
+            from .fleet import FleetEpochRunner
+            self.fleet = FleetEpochRunner(self.fragments, log2_te,
+                                          **(fleet_kwargs or {}))
 
-    def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream]) -> None:
+    def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream],
+                  packet=None) -> None:
+        """Process one epoch.  ``packet`` (a prepacked ``FleetPacket``,
+        e.g. from ``Replayer.epoch_packet``) lets the fleet backend skip
+        re-packing ``streams``; the loop backend ignores it."""
+        if self.backend == "fleet":
+            ns = (self.ns if self.subepoching
+                  else {sw: 1 for sw in self.fragments})
+            recs, pebs = self.fleet.run_epoch(epoch, ns, streams,
+                                              packet=packet)
+        else:
+            recs, pebs = self._run_epoch_loop(epoch, streams)
+        if self.subepoching:
+            for sw, peb in pebs.items():
+                self.ns[sw] = equalize.next_n(self.ns[sw], peb,
+                                              self.rho_target)
+        self.records[epoch] = recs
+        self.peb_log.append(pebs)
+        self.n_log.append(dict(self.ns))
+
+    def _run_epoch_loop(self, epoch: int, streams: Dict[int, SwitchStream],
+                        ) -> Tuple[Dict[int, EpochRecords],
+                                   Dict[int, float]]:
         epoch_start = epoch << self.log2_te
         recs: Dict[int, EpochRecords] = {}
         pebs: Dict[int, float] = {}
@@ -70,11 +112,7 @@ class DiSketchSystem:
                                 single_hop=st.single_hop)
             recs[sw] = rec
             pebs[sw] = equalize.peb_epoch(rec)
-            if self.subepoching:
-                self.ns[sw] = equalize.next_n(n, pebs[sw], self.rho_target)
-        self.records[epoch] = recs
-        self.peb_log.append(pebs)
-        self.n_log.append(dict(self.ns))
+        return recs, pebs
 
     # -- query plane --------------------------------------------------------
 

@@ -34,6 +34,27 @@ def peb_epoch(rec: EpochRecords) -> float:
                           for s in range(rec.n)]))
 
 
+def peb_fleet(stacked: np.ndarray, ns: np.ndarray, widths: np.ndarray,
+              kind: str) -> np.ndarray:
+    """Vectorized Eq. 4/5 over a fleet's stacked counters.
+
+    ``stacked``: (n_frags, n_sub_max, width_max) with exact zeros outside
+    each fragment's live ``[:ns[f], :widths[f]]`` block (the fleet-kernel
+    output layout), so summing over the full padded axes is equivalent to
+    summing the live block.  Returns per-fragment epoch PEBs identical to
+    ``peb_epoch`` on the unpacked records.
+    """
+    c = stacked.astype(np.float64)
+    n_sub_max = c.shape[1]
+    w = np.asarray(widths, np.float64)[:, None]
+    if kind in ("cs", "um"):
+        row = np.sqrt((c * c).sum(axis=-1) / w)      # (n_frags, n_sub_max)
+    else:
+        row = np.abs(c).sum(axis=-1) / w
+    live = np.arange(n_sub_max)[None, :] < np.asarray(ns)[:, None]
+    return (row * live).sum(axis=1) / np.asarray(ns, np.float64)
+
+
 def next_n(n: int, peb: float, rho_target: float) -> int:
     """Eq. 6: moving adjustment of the subepoch count."""
     if peb > 2.0 * rho_target:

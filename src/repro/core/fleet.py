@@ -1,0 +1,250 @@
+"""Fleet execution engine: one batched device dispatch per network epoch.
+
+``DiSketchSystem.run_epoch`` originally walked switches in a Python loop,
+calling the numpy fragment path once per switch — correct, but serialized
+exactly where the ROADMAP demands line-rate throughput.  This module packs
+every switch's epoch stream into one dense packet rectangle and updates
+*all* fragments with a single ``fleet_update`` kernel launch
+(repro.kernels.sketch_update.fleet), then unpacks the stacked counters
+into the same per-fragment ``EpochRecords`` the query plane already
+consumes.  The error-equalization control loop (§4.2) reads its PEBs
+directly from the stacked output (``equalize.peb_fleet``).  Host-side,
+the per-epoch cost is one vectorized pack/densify copy of the packet
+stream (the compact packed form is built once per epoch by
+``Replayer.epoch_packet`` and cached; the padded dense rectangle is a
+transient) plus O(n_frags) bookkeeping — no per-packet Python work.
+
+Numerical contract: for ``cs``/``cms`` fragments without §4.4 mitigation,
+the fleet path produces bit-identical counters to the per-switch loop
+(same ``frag_seed`` derivation, same hash arithmetic in-kernel; validated
+in tests/test_fleet.py).  UnivMon and mitigation stay on the loop backend
+for now (per-level scatter and the second-subepoch mask are not yet
+batched).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import equalize
+from .fragment import (EpochRecords, FragmentConfig, _ROLE_COL, _ROLE_SIGN,
+                       _ROLE_SUB, frag_seed)
+
+
+@dataclass
+class FleetPacket:
+    """One epoch's packets for the whole fleet, packed fragment-major.
+
+    ``keys``/``values``/``ts`` are the concatenation of every fragment's
+    stream in ``frag_order``; ``offsets[f] : offsets[f+1]`` is fragment
+    ``frag_order[f]``'s segment.  Built once per epoch (by
+    ``net.simulator.Replayer.epoch_packet`` or ``pack_streams``) and
+    densified on demand.
+    """
+
+    keys: np.ndarray           # (P,) uint32
+    values: np.ndarray         # (P,) int64
+    ts: np.ndarray             # (P,) int64
+    offsets: np.ndarray        # (n_frags + 1,) int64 segment offsets
+    frag_order: Tuple[int, ...]
+
+    @property
+    def n_frags(self) -> int:
+        return len(self.frag_order)
+
+    def seg_lengths(self) -> np.ndarray:
+        return np.diff(self.offsets)
+
+    def densify(self, blk: int = 256) -> Tuple[np.ndarray, np.ndarray,
+                                               np.ndarray]:
+        """(n_frags, p_max) rectangles, value-0 padded, p_max % blk == 0.
+
+        ``p_max`` is rounded up to the next power of two (>= blk) so the
+        jit'd kernel sees few distinct shapes across epochs.  The dense
+        rectangle is a transient — deliberately NOT cached: under skewed
+        per-switch loads it is n_frags x pow2(hottest segment), far
+        larger than the compact packed representation, and retaining one
+        per epoch would accumulate gigabytes.
+        """
+        lens = self.seg_lengths()
+        p_max = max(int(lens.max(initial=0)), blk)
+        p_max = 1 << int(np.ceil(np.log2(p_max)))
+        p_max += (-p_max) % blk
+        f = self.n_frags
+        keys = np.zeros((f, p_max), np.uint32)
+        vals = np.zeros((f, p_max), np.float32)
+        ts = np.zeros((f, p_max), np.uint32)
+        for i in range(f):
+            lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+            keys[i, :hi - lo] = self.keys[lo:hi]
+            vals[i, :hi - lo] = self.values[lo:hi]
+            ts[i, :hi - lo] = self.ts[lo:hi]
+        return keys, vals, ts
+
+
+def pack_streams(streams: Dict[int, "SwitchStream"],
+                 frag_order: Sequence[int]) -> FleetPacket:
+    """Concatenate per-switch streams into a fragment-major FleetPacket."""
+    ks, vs, tss, offs = [], [], [], [0]
+    for sw in frag_order:
+        st = streams.get(sw)
+        n = 0 if st is None else len(st.keys)
+        if n:
+            ks.append(np.asarray(st.keys, np.uint32))
+            vs.append(np.asarray(st.values, np.int64))
+            tss.append(np.asarray(st.ts, np.int64))
+        offs.append(offs[-1] + n)
+    cat = (lambda xs, dt: np.concatenate(xs) if xs else np.zeros(0, dt))
+    return FleetPacket(cat(ks, np.uint32), cat(vs, np.int64),
+                       cat(tss, np.int64), np.asarray(offs, np.int64),
+                       tuple(frag_order))
+
+
+def build_params(fragments: Dict[int, FragmentConfig], epoch: int,
+                 ns: Dict[int, int],
+                 frag_order: Sequence[int]) -> np.ndarray:
+    """Per-fragment int32 parameter table for the fleet kernel."""
+    from ..kernels.sketch_update import fleet as FK
+
+    params = np.zeros((len(frag_order), FK.N_PARAMS), np.int32)
+    for i, sw in enumerate(frag_order):
+        cfg = fragments[sw]
+        n = int(ns[sw])
+        assert n & (n - 1) == 0, f"n_sub must be a power of two, got {n}"
+        params[i, FK.PARAM_COL_SEED] = frag_seed(cfg.frag_id, epoch,
+                                                 _ROLE_COL, cfg.base_seed)
+        params[i, FK.PARAM_SIGN_SEED] = frag_seed(cfg.frag_id, epoch,
+                                                  _ROLE_SIGN, cfg.base_seed)
+        params[i, FK.PARAM_SUB_SEED] = frag_seed(cfg.frag_id, epoch,
+                                                 _ROLE_SUB, cfg.base_seed)
+        params[i, FK.PARAM_WIDTH] = cfg.width
+        params[i, FK.PARAM_N_SUB] = n
+        params[i, FK.PARAM_LOG2_N_SUB] = n.bit_length() - 1
+    return params
+
+
+class FleetEpochRunner:
+    """Batched replacement for the per-switch loop in ``run_epoch``.
+
+    Holds the fleet's static configuration, packs each epoch's streams,
+    dispatches one ``fleet_update``, and unpacks ``EpochRecords`` + PEBs.
+    ``keep_stacked=True`` additionally retains the raw stacked counters
+    per epoch for ``point_query`` (the batched query-side op).
+    """
+
+    def __init__(self, fragments: Dict[int, FragmentConfig], log2_te: int,
+                 *, blk: int = 256, w_blk: int = 2048,
+                 interpret: bool = True, keep_stacked: bool = False):
+        kinds = {cfg.kind for cfg in fragments.values()}
+        if kinds - {"cs", "cms"} or len(kinds) > 1:
+            raise ValueError(
+                f"fleet backend supports a homogeneous cs or cms fleet, "
+                f"got {sorted(kinds)}; use backend='loop' for UnivMon or "
+                "mixed kinds")
+        if any(cfg.mitigation for cfg in fragments.values()):
+            raise ValueError("fleet backend does not support §4.4 "
+                             "mitigation yet; use backend='loop'")
+        self.fragments = fragments
+        self.kind = next(iter(kinds)) if kinds else "cms"
+        self.log2_te = log2_te
+        self.blk = blk
+        self.w_blk = w_blk
+        self.interpret = interpret
+        self.keep_stacked = keep_stacked
+        self.frag_order: Tuple[int, ...] = tuple(sorted(fragments))
+        self.widths = np.array([fragments[sw].width
+                                for sw in self.frag_order], np.int64)
+        self.stacked: Dict[int, np.ndarray] = {}
+        self._params_log: Dict[int, np.ndarray] = {}
+
+    def run_epoch(self, epoch: int, ns: Dict[int, int],
+                  streams: Dict[int, "SwitchStream"],
+                  packet: Optional[FleetPacket] = None,
+                  ) -> Tuple[Dict[int, EpochRecords], Dict[int, float]]:
+        from ..kernels.sketch_update.fleet import (PARAM_N_SUB, fleet_update)
+
+        if packet is None:
+            packet = pack_streams(streams, self.frag_order)
+        assert packet.frag_order == self.frag_order
+        # Exactness bound.  Counters are f32 accumulations: exact while
+        # every intermediate magnitude stays below 2^24.  For unsigned
+        # (cms) counters the final value is the peak, so a cheap output
+        # check suffices (below); for signed (cs) counters cancellation
+        # can hide an inexact intermediate peak, so bound it by the only
+        # sound input-side quantity: the fragment's total |value| mass.
+        if self.kind == "cs" and len(packet.values):
+            cum = np.concatenate([[0], np.cumsum(np.abs(packet.values))])
+            seg_mass = cum[packet.offsets[1:]] - cum[packet.offsets[:-1]]
+            if seg_mass.max(initial=0) >= 2 ** 24:
+                raise OverflowError(
+                    f"per-fragment |value| mass {seg_mass.max():.3g} "
+                    "exceeds the f32 exact-integer range (2^24); use "
+                    "backend='loop' or shorten the epoch")
+        keys, vals, ts = packet.densify(self.blk)
+        params = build_params(self.fragments, epoch, ns, self.frag_order)
+        n_arr = params[:, PARAM_N_SUB].astype(np.int64)
+        n_sub_max = int(n_arr.max(initial=1))
+        width_max = int(self.widths.max(initial=4))
+
+        stacked_f32 = np.asarray(fleet_update(
+            keys, vals, ts, params, n_sub_max=n_sub_max,
+            width_max=width_max, log2_te=self.log2_te,
+            signed=self.kind == "cs", blk=self.blk, w_blk=self.w_blk,
+            interpret=self.interpret))
+        # Output-side exactness check (tight for cms, where counters are
+        # monotone non-negative and the final value is the peak).
+        peak = float(np.abs(stacked_f32).max(initial=0.0))
+        if peak >= 2 ** 24:
+            raise OverflowError(
+                f"fleet counter magnitude {peak:.3g} exceeds the f32 "
+                "exact-integer range (2^24); use backend='loop' or "
+                "shorten the epoch")
+        stacked = stacked_f32.astype(np.int64)
+
+        pebs_arr = equalize.peb_fleet(stacked, n_arr, self.widths, self.kind)
+        recs: Dict[int, EpochRecords] = {}
+        pebs: Dict[int, float] = {}
+        for i, sw in enumerate(self.frag_order):
+            cfg = self.fragments[sw]
+            n = int(n_arr[i])
+            recs[sw] = EpochRecords(
+                cfg.frag_id, epoch, n,
+                stacked[i, :n, :cfg.width].copy(), cfg.kind,
+                cfg.mitigation, cfg.base_seed)
+            pebs[sw] = float(pebs_arr[i])
+        if self.keep_stacked:
+            self.stacked[epoch] = stacked
+            self._params_log[epoch] = params
+        return recs, pebs
+
+    def point_query(self, epoch: int, keys: np.ndarray,
+                    path: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Batched epoch point-query over the retained stacked counters.
+
+        ``path`` restricts the merge to the fragments the queried flows
+        traverse (§4.3 Step 1); all queried keys must share the path.
+        Omitting it merges every fleet fragment, which is only correct
+        when flows traverse all of them (linear-path scenarios).
+        """
+        from . import query as Q
+
+        if epoch not in self.stacked:
+            raise KeyError(f"epoch {epoch} not retained "
+                           "(construct with keep_stacked=True)")
+        from ..kernels.sketch_update import fleet as FK
+
+        frag_sel = None
+        if path is not None:
+            on_path = set(path)
+            frag_sel = np.array([sw in on_path for sw in self.frag_order])
+        p = self._params_log[epoch]
+        return Q.fleet_query_epoch(
+            self.stacked[epoch],
+            col_seeds=p[:, FK.PARAM_COL_SEED].astype(np.int64),
+            sign_seeds=p[:, FK.PARAM_SIGN_SEED].astype(np.int64),
+            sub_seeds=p[:, FK.PARAM_SUB_SEED].astype(np.int64),
+            ns=p[:, FK.PARAM_N_SUB].astype(np.int64),
+            widths=self.widths, keys=keys, kind=self.kind,
+            frag_sel=frag_sel)

@@ -132,6 +132,55 @@ def _query_epoch_fragment_merge(records, keys, kind, single_hop, level):
     return np.median(ests, axis=0)
 
 
+def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
+                      sign_seeds: np.ndarray, sub_seeds: np.ndarray,
+                      ns: np.ndarray, widths: np.ndarray,
+                      keys: np.ndarray, kind: str,
+                      frag_sel: Optional[np.ndarray] = None) -> np.ndarray:
+    """Batched epoch point-query over a fleet's stacked counters.
+
+    One vectorized pass over the (n_frags, n_sub_max, width_max) block
+    produced by the fleet kernel: every fragment's raw estimate for every
+    key is gathered at once (hashes broadcast over the fragment axis),
+    scaled proportionally to the epoch (x n, §1), and merged across
+    fragments — min of rows for Count-Min, median for Count Sketch.
+    Semantically identical to ``query_epoch(..., merge="fragment")`` on
+    the unpacked per-fragment records (tested in tests/test_fleet.py).
+
+    ``frag_sel`` (bool, (n_frags,)) restricts the merge to the fragments
+    on the queried flows' path — §4.3 Step 1.  Without it, *all* fleet
+    fragments are merged, which is only correct when every queried flow
+    traverses every fragment (e.g. the §6.3 linear-path scenarios):
+    off-path fragments hold near-zero collision values that would bias
+    the min/median toward zero.
+    """
+    keys = np.asarray(keys, dtype=np.uint32)
+    if frag_sel is not None:
+        frag_sel = np.asarray(frag_sel, bool)
+        stacked = stacked[frag_sel]
+        col_seeds = np.asarray(col_seeds)[frag_sel]
+        sign_seeds = np.asarray(sign_seeds)[frag_sel]
+        sub_seeds = np.asarray(sub_seeds)[frag_sel]
+        ns = np.asarray(ns)[frag_sel]
+        widths = np.asarray(widths)[frag_sel]
+    if len(keys) == 0 or stacked.shape[0] == 0:
+        return np.zeros(len(keys))
+    ns = np.asarray(ns, np.int64)[:, None]            # (F, 1)
+    widths = np.asarray(widths, np.int64)[:, None]
+    k2 = keys[None, :]                                # (1, K)
+    col = H.hash_mod(k2, np.asarray(col_seeds)[:, None], widths)   # (F, K)
+    sub = H.hash_pow2(k2, np.asarray(sub_seeds)[:, None], ns)
+    raw = stacked[np.arange(stacked.shape[0])[:, None], sub,
+                  col].astype(np.float64)
+    if kind in ("cs", "um"):
+        raw = raw * H.hash_sign(k2, np.asarray(sign_seeds)[:, None]
+                                ).astype(np.float64)
+    raw = raw * ns.astype(np.float64)
+    if kind == "cms":
+        return raw.min(axis=0)
+    return np.median(raw, axis=0)
+
+
 def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],
                  keys: np.ndarray, kind: str,
                  single_hop: Optional[np.ndarray] = None,

@@ -1,4 +1,6 @@
+from .fleet import fleet_update, fleet_update_loop
 from .ops import sketch_update
 from .ref import sketch_update_ref
 
-__all__ = ["sketch_update", "sketch_update_ref"]
+__all__ = ["fleet_update", "fleet_update_loop", "sketch_update",
+           "sketch_update_ref"]

@@ -1,0 +1,179 @@
+"""Fleet-level Pallas kernel: update *all* fragments of a network epoch
+in one device dispatch (the batched data plane).
+
+``kernel.py`` updates one fragment per ``pallas_call``; a network has
+hundreds of fragments and a Python loop over them serializes the epoch
+(host dispatch latency dominates, and no cross-fragment batching reaches
+the MXU).  This module extends the one-hot-matmul histogram with a
+*fragment grid axis*:
+
+    grid = (n_frags, width_blocks, packet_blocks)
+
+Packets are packed host-side into a dense ``(n_frags, p_max)`` rectangle
+(each row = one fragment's epoch stream, zero-value padded; see
+``repro.core.fleet.pack_streams``).  Per-fragment parameters — the three
+hash seeds, the hash width, the subepoch count — ride in a small
+``(n_frags, 8)`` int32 table and are read inside the kernel, so fragments
+with *heterogeneous* widths and subepoch counts share one launch:
+
+  * columns are hashed modulo the fragment's true width (a traced scalar;
+    Lemire fast-range works unchanged with a dynamic modulus), so columns
+    beyond ``width[f]`` are never written;
+  * the packet/flow subepoch ids are masked by ``n_sub[f] - 1`` (a traced
+    scalar), so rows beyond ``n_sub[f]`` are never written;
+  * the stacked output is ``(n_frags, n_sub_max, width_max)`` with exact
+    zeros outside each fragment's live ``[:n_sub[f], :width[f]]`` block.
+
+Padding packets carry ``value = 0`` and therefore contribute nothing
+(one-hot x 0 = 0), the same trick the single-fragment path uses.
+
+VMEM budget per grid step is unchanged from the single-fragment kernel
+(the fragment axis only selects which counter tile is resident):
+3*BLK*4 B packet block + BLK*W_BLK*4 B one-hot + N_SUB_MAX*W_BLK*4 B
+counter tile.  See docs/kernels.md for the full derivation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .kernel import block_contrib
+
+# Columns of the per-fragment int32 parameter table.
+PARAM_COL_SEED = 0
+PARAM_SIGN_SEED = 1
+PARAM_SUB_SEED = 2
+PARAM_WIDTH = 3
+PARAM_N_SUB = 4
+PARAM_LOG2_N_SUB = 5
+N_PARAMS = 8  # padded to 8 for alignment
+
+
+def fleet_update_kernel(params_ref, keys_ref, vals_ref, ts_ref, out_ref, *,
+                        w_blk: int, n_sub_max: int, log2_te: int,
+                        signed: bool):
+    wi = pl.program_id(1)   # width-block index
+    pj = pl.program_id(2)   # packet-block index (sequential reduction)
+
+    @pl.when(pj == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # This fragment's hash parameters, read in-kernel as traced scalars.
+    params = params_ref[...][0]                     # (N_PARAMS,) int32
+    contrib = block_contrib(
+        keys_ref[...][0].astype(jnp.uint32),
+        vals_ref[...][0].astype(jnp.float32),
+        ts_ref[...][0].astype(jnp.uint32),
+        col_seed=params[PARAM_COL_SEED].astype(jnp.uint32),
+        sign_seed=params[PARAM_SIGN_SEED].astype(jnp.uint32),
+        sub_seed=params[PARAM_SUB_SEED].astype(jnp.uint32),
+        width=params[PARAM_WIDTH].astype(jnp.uint32),
+        n_mask=(params[PARAM_N_SUB] - 1).astype(jnp.uint32),
+        shift=(jnp.uint32(log2_te)
+               - params[PARAM_LOG2_N_SUB].astype(jnp.uint32)),
+        wi=wi, w_blk=w_blk, n_sub_rows=n_sub_max, signed=signed)
+    out_ref[...] += contrib[None]
+
+
+def fleet_update_pallas(keys, vals, ts, params, *, n_sub_max: int,
+                        padded_width: int, log2_te: int, signed: bool,
+                        blk: int, w_blk: int, interpret: bool = False):
+    """Lowered pallas_call over the (fragment, width, packet) grid.
+
+    ``keys``/``vals``/``ts``: (n_frags, p_max) with p_max % blk == 0;
+    ``params``: (n_frags, N_PARAMS) int32.  The packet axis is the inner
+    sequential reduction, so each (fragment, width-block) counter tile is
+    initialized once and revisited across packet blocks.
+    """
+    n_frags, p = keys.shape
+    assert p % blk == 0 and padded_width % w_blk == 0
+    grid = (n_frags, padded_width // w_blk, p // blk)
+    kernel = functools.partial(
+        fleet_update_kernel, w_blk=w_blk, n_sub_max=n_sub_max,
+        log2_te=log2_te, signed=signed)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N_PARAMS), lambda f, i, j: (f, 0)),
+            pl.BlockSpec((1, blk), lambda f, i, j: (f, j)),
+            pl.BlockSpec((1, blk), lambda f, i, j: (f, j)),
+            pl.BlockSpec((1, blk), lambda f, i, j: (f, j)),
+        ],
+        out_specs=pl.BlockSpec((1, n_sub_max, w_blk),
+                               lambda f, i, j: (f, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_frags, n_sub_max, padded_width),
+                                       jnp.float32),
+        interpret=interpret,
+    )(params, keys, vals, ts)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_sub_max", "width_max", "log2_te", "signed", "blk", "w_blk",
+    "interpret"))
+def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
+                 log2_te: int, signed: bool = True, blk: int = 1024,
+                 w_blk: int = 2048, interpret: bool = True):
+    """Compute all subepoch-record counters for a whole fleet epoch.
+
+    Args:
+      keys/vals/ts: (n_frags, p_max) dense packet rectangle (rows are
+        per-fragment streams, padded with value-0 packets).
+      params: (n_frags, N_PARAMS) int32 per-fragment parameter table
+        (see ``repro.core.fleet.build_params``).
+      n_sub_max: max subepoch count across the fleet (power of two).
+      width_max: max hash width across the fleet.
+
+    Returns (n_frags, n_sub_max, width_max) float32 counters (exact
+    integers while |c| < 2^24); entries outside a fragment's live
+    ``[:n_sub[f], :width[f]]`` block are exactly zero.
+    """
+    n_frags, p = keys.shape
+    pad_p = (-p) % blk
+    if pad_p:
+        keys = jnp.pad(keys.astype(jnp.uint32), ((0, 0), (0, pad_p)))
+        vals = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, pad_p)))
+        ts = jnp.pad(ts.astype(jnp.uint32), ((0, 0), (0, pad_p)))
+    w_blk = min(w_blk, int(2 ** np.ceil(np.log2(max(width_max, 128)))))
+    pad_w = (-width_max) % w_blk
+    out = fleet_update_pallas(
+        keys.astype(jnp.uint32), vals.astype(jnp.float32),
+        ts.astype(jnp.uint32), params.astype(jnp.int32),
+        n_sub_max=n_sub_max, padded_width=width_max + pad_w,
+        log2_te=log2_te, signed=signed, blk=blk, w_blk=w_blk,
+        interpret=interpret)
+    return out[:, :, :width_max]
+
+
+def fleet_update_loop(keys, vals, ts, params, *, n_sub_max: int,
+                      width_max: int, log2_te: int, signed: bool = True,
+                      backend: str = "ref", **kw):
+    """Per-fragment loop baseline (and oracle): one ``sketch_update``
+    dispatch per fragment, results padded into the stacked layout.
+
+    ``backend="ref"`` gives the jnp scatter-add oracle; ``"pallas"`` gives
+    the loop-of-kernels baseline the fleet path replaces (benchmarked in
+    benchmarks/kernel_bench.py).
+    """
+    from .ops import sketch_update
+
+    params = np.asarray(params)
+    n_frags = params.shape[0]
+    out = np.zeros((n_frags, n_sub_max, width_max), np.float32)
+    for f in range(n_frags):
+        width = int(params[f, PARAM_WIDTH])
+        n_sub = int(params[f, PARAM_N_SUB])
+        o = sketch_update(
+            jnp.asarray(keys[f]), jnp.asarray(vals[f]), jnp.asarray(ts[f]),
+            width=width, n_sub=n_sub, log2_te=log2_te,
+            col_seed=int(params[f, PARAM_COL_SEED]),
+            sign_seed=int(params[f, PARAM_SIGN_SEED]),
+            sub_seed=int(params[f, PARAM_SUB_SEED]),
+            signed=signed, backend=backend, **kw)
+        out[f, :n_sub, :width] = np.asarray(o)
+    return out

@@ -47,13 +47,54 @@ def _hash_u32(keys, seed):
 
 
 def _hash_mod(keys, seed, mod):
-    """Lemire-style fast-range in two 16-bit limbs (matches hashing.py)."""
+    """Lemire-style fast-range in two 16-bit limbs (matches hashing.py).
+
+    ``mod`` may be a static Python int or a traced uint32 scalar (the
+    fleet kernel hashes modulo a per-fragment width read in-kernel).
+    """
     h = _hash_u32(keys, seed)
-    mod_u = np.uint32(mod)
+    mod_u = jnp.uint32(mod)
     hi = h >> np.uint32(16)
     lo = h & np.uint32(0xFFFF)
     t = hi * mod_u + ((lo * mod_u) >> np.uint32(16))
     return (t >> np.uint32(16)).astype(jnp.int32)
+
+
+def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
+                  width, n_mask, shift, wi, w_blk, n_sub_rows, signed):
+    """Shared per-packet-block body: hashes -> §4.1 monitored mask ->
+    one-hots -> one MXU dot.  The single source of truth for the sketch
+    update arithmetic; the single-fragment and fleet kernels both call
+    it.  Hash scalars may be static Python ints (single-fragment) or
+    traced uint32 scalars (per-fragment table, fleet); ``n_sub_rows``
+    (the output row count) is always static.
+    """
+    blk = keys.shape[0]
+    # Subepoch of the packet: Method 2 bit-slice of the timestamp.
+    sub_pkt = ((ts >> shift) & n_mask).astype(jnp.int32)
+    # Subepoch the flow is monitored in (temporal sampling, §4.1).
+    sub_flow = (_hash_u32(keys, sub_seed) & n_mask).astype(jnp.int32)
+    monitored = (sub_pkt == sub_flow).astype(jnp.float32)
+
+    col = _hash_mod(keys, col_seed, width)          # (BLK,) in [0, width)
+    if signed:
+        sgn = (jnp.float32(1.0) - 2.0 * (_hash_u32(keys, sign_seed)
+                                         & np.uint32(1)).astype(jnp.float32))
+        vals = vals * sgn
+    vals = vals * monitored
+
+    # One-hot over this width block: (BLK, W_BLK) in f32 for the MXU.
+    local_col = col - wi * w_blk
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, w_blk), 1)
+    onehot_col = (local_col[:, None] == col_iota).astype(jnp.float32)
+    # One-hot over subepochs: (N_SUB, BLK); ids >= the fragment's true
+    # n_sub never occur, so any extra rows stay zero.
+    sub_iota = jax.lax.broadcasted_iota(jnp.int32, (n_sub_rows, blk), 0)
+    onehot_sub = (sub_pkt[None, :] == sub_iota).astype(jnp.float32)
+
+    # (N_SUB, BLK) @ (BLK, W_BLK) -> (N_SUB, W_BLK) on the MXU.
+    return jax.lax.dot(onehot_sub * vals[None, :], onehot_col,
+                       precision=jax.lax.Precision.HIGHEST)
 
 
 def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
@@ -67,38 +108,14 @@ def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    keys = keys_ref[...].astype(np.uint32)          # (BLK,)
-    vals = vals_ref[...].astype(jnp.float32)         # (BLK,)
-    ts = ts_ref[...].astype(np.uint32)              # (BLK,)
-    blk = keys.shape[0]
-
-    # Subepoch of the packet: Method 2 bit-slice of the timestamp.
-    shift = np.uint32(log2_te - (n_sub.bit_length() - 1))
-    sub_pkt = ((ts >> shift) & np.uint32(n_sub - 1)).astype(jnp.int32)
-    # Subepoch the flow is monitored in (temporal sampling, §4.1).
-    sub_flow = (_hash_u32(keys, np.uint32(sub_seed))
-                & np.uint32(n_sub - 1)).astype(jnp.int32)
-    monitored = (sub_pkt == sub_flow).astype(jnp.float32)
-
-    col = _hash_mod(keys, np.uint32(col_seed), hash_width)  # (BLK,) int32
-    if signed:
-        sgn = (jnp.float32(1.0) - 2.0 * (_hash_u32(keys, np.uint32(sign_seed))
-                                         & np.uint32(1)).astype(jnp.float32))
-        vals = vals * sgn
-    vals = vals * monitored
-
-    # One-hot over this width block: (BLK, W_BLK) in f32 for the MXU.
-    local_col = col - wi * w_blk
-    col_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, w_blk), 1)
-    onehot_col = (local_col[:, None] == col_iota).astype(jnp.float32)
-    # One-hot over subepochs: (N_SUB, BLK).
-    sub_iota = jax.lax.broadcasted_iota(jnp.int32, (n_sub, blk), 0)
-    onehot_sub = (sub_pkt[None, :] == sub_iota).astype(jnp.float32)
-
-    # (N_SUB, BLK) @ (BLK, W_BLK) -> (N_SUB, W_BLK) on the MXU.
-    contrib = jax.lax.dot(onehot_sub * vals[None, :], onehot_col,
-                          precision=jax.lax.Precision.HIGHEST)
-    out_ref[...] += contrib
+    out_ref[...] += block_contrib(
+        keys_ref[...].astype(np.uint32), vals_ref[...].astype(jnp.float32),
+        ts_ref[...].astype(np.uint32),
+        col_seed=np.uint32(col_seed), sign_seed=np.uint32(sign_seed),
+        sub_seed=np.uint32(sub_seed), width=hash_width,
+        n_mask=np.uint32(n_sub - 1),
+        shift=np.uint32(log2_te - (n_sub.bit_length() - 1)),
+        wi=wi, w_blk=w_blk, n_sub_rows=n_sub, signed=signed)
 
 
 def sketch_update_pallas(keys, vals, ts, *, hash_width: int,

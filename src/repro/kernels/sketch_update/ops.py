@@ -2,6 +2,45 @@
 
 On CPU (this container) the Pallas body runs in interpret mode; on TPU the
 same call lowers to Mosaic.  ``backend="ref"`` selects the pure-jnp oracle.
+
+Why a matmul and not a scatter
+------------------------------
+A sketch update is a histogram: ``counters[sub(p), col(p)] += val(p)`` for
+every packet ``p``.  TPUs have no efficient data-dependent scatter, but
+they have an MXU that multiplies (8,128)-tiled f32 matrices at full rate.
+The kernel therefore recasts the histogram as two one-hot contractions:
+
+    contribution[s, c] = sum_p onehot_sub[s, p] * val'[p] * onehot_col[p, c]
+
+where ``val' = value * sign * monitored`` folds in the Count-Sketch sign
+and the §4.1 temporal-sampling mask.  Building the one-hots is cheap VPU
+work (an iota compare); the contraction is a single
+(n_sub x BLK) @ (BLK x W_BLK) matmul per packet block.  Because every
+hash (column, sign, packet/flow subepoch) is computed in-kernel in uint32
+arithmetic, HBM traffic is exactly: packet stream in, counters out.
+
+Padding contract
+----------------
+Packet arrays are padded to a BLK multiple with ``value = 0`` entries —
+a zero value times any one-hot contributes nothing, so padding needs no
+masking.  The width is padded to a W_BLK multiple but columns are hashed
+modulo the *true* width, so padded columns are never written and the
+wrapper can slice them off.
+
+Numerical contract
+------------------
+Counters are f32 accumulations of integer contributions: exact while
+|counter| < 2^24, which every caller in this repo satisfies.  The three
+implementations (this kernel, ref.py's jnp scatter oracle, and the numpy
+fragment path in core/fragment.py) agree bit-for-bit on integer inputs
+(tests/test_kernels.py).
+
+Fleet variant
+-------------
+``fleet.py`` extends the same kernel with a *fragment* grid axis so one
+dispatch updates every fragment of a network epoch (heterogeneous widths
+and subepoch counts ride in a per-fragment parameter table).  See
+docs/kernels.md for the packing layout and the VMEM budget derivation.
 """
 from __future__ import annotations
 

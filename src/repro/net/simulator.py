@@ -25,6 +25,7 @@ class Replayer:
         # Per-switch packet index lists, pre-split by epoch.
         self._streams: List[Dict[int, SwitchStream]] = [
             {} for _ in range(wl.n_epochs)]
+        self._packets: Dict = {}  # (epoch, frag_order) -> FleetPacket
         for sw in range(n_switches):
             on_path = (wl.path_mat == sw).any(axis=1)  # per flow
             pkt_sel = on_path[wl.pkt_flow]
@@ -48,11 +49,38 @@ class Replayer:
                 )
 
     def run(self, system) -> None:
+        # Fleet-backed systems consume the cached packed packet tensor
+        # (built once per epoch, shared across systems and replays).
+        fleet = getattr(system, "fleet", None)
         for ep in range(self.wl.n_epochs):
-            system.run_epoch(ep, self._streams[ep])
+            if fleet is not None:
+                system.run_epoch(ep, self._streams[ep],
+                                 packet=self.epoch_packet(
+                                     ep, fleet.frag_order))
+            else:
+                system.run_epoch(ep, self._streams[ep])
 
     def epoch_stream(self, epoch: int) -> Dict[int, SwitchStream]:
         return self._streams[epoch]
+
+    def epoch_packet(self, epoch: int, frag_order=None):
+        """Packed fragment-major packet tensor for the fleet engine.
+
+        Concatenates the epoch's per-switch streams (keys/values/ts) with
+        segment offsets, in ``frag_order`` (default: all switches in id
+        order).  Built once and cached — the fleet kernel and benchmarks
+        consume this directly.
+        """
+        from ..core.fleet import pack_streams
+
+        if frag_order is None:
+            frag_order = tuple(range(self.n_switches))
+        frag_order = tuple(frag_order)
+        key = (epoch, frag_order)
+        if key not in self._packets:
+            self._packets[key] = pack_streams(self._streams[epoch],
+                                              frag_order)
+        return self._packets[key]
 
 
 def rmse(est: np.ndarray, truth: np.ndarray) -> float:

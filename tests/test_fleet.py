@@ -1,0 +1,220 @@
+"""Fleet engine tests: the batched (one-dispatch-per-epoch) path must be
+bit-identical to the per-switch loop — kernel level, system level, PEB
+control loop, and the batched query-side op."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import equalize, query as Q
+from repro.core.disketch import DiSketchSystem, DiscoSystem
+from repro.core.fleet import FleetEpochRunner, build_params, pack_streams
+from repro.core.fragment import FragmentConfig, process_epoch
+from repro.kernels.sketch_update import fleet as FK
+from repro.net.simulator import Replayer
+from repro.net.traffic import cov_list, linear_path_workload
+
+LOG2_TE = 12
+
+
+def _fleet_inputs(n_frags, p, seed=0, widths=None, nsubs=None):
+    rng = np.random.RandomState(seed)
+    keys = rng.randint(0, 900, (n_frags, p)).astype(np.uint32)
+    vals = np.ones((n_frags, p), np.float32)
+    for f in range(n_frags):          # ragged streams: zero-value padding
+        vals[f, rng.randint(p // 2, p):] = 0.0
+    ts = rng.randint(0, 1 << LOG2_TE, (n_frags, p)).astype(np.uint32)
+    widths = widths or [128, 300, 512, 64, 1000][:n_frags]
+    nsubs = nsubs or [1, 2, 8, 4, 16][:n_frags]
+    params = np.zeros((n_frags, FK.N_PARAMS), np.int32)
+    for f in range(n_frags):
+        params[f, FK.PARAM_COL_SEED] = 11 + f
+        params[f, FK.PARAM_SIGN_SEED] = 22 + f
+        params[f, FK.PARAM_SUB_SEED] = 33 + f
+        params[f, FK.PARAM_WIDTH] = widths[f]
+        params[f, FK.PARAM_N_SUB] = nsubs[f]
+        params[f, FK.PARAM_LOG2_N_SUB] = nsubs[f].bit_length() - 1
+    return keys, vals, ts, params, widths, nsubs
+
+
+@pytest.mark.parametrize("signed", [True, False])
+def test_fleet_kernel_matches_loop_oracle(signed):
+    """Heterogeneous widths/subepoch counts in one dispatch == one
+    sketch_update per fragment."""
+    keys, vals, ts, params, widths, nsubs = _fleet_inputs(5, 700)
+    kw = dict(n_sub_max=16, width_max=1000, log2_te=LOG2_TE, signed=signed)
+    out_fleet = np.asarray(FK.fleet_update(
+        jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(ts),
+        jnp.asarray(params), blk=256, w_blk=512, interpret=True, **kw))
+    out_loop = FK.fleet_update_loop(keys, vals, ts, params,
+                                    backend="ref", **kw)
+    np.testing.assert_array_equal(out_fleet, out_loop)
+    # stacked layout contract: exact zeros outside each live block
+    for f in range(5):
+        assert not out_fleet[f, nsubs[f]:, :].any()
+        assert not out_fleet[f, :, widths[f]:].any()
+
+
+def _small_workload(n_hops=5, seed=1, n_epochs=4):
+    rng = np.random.RandomState(seed)
+    widths = np.maximum(cov_list(n_hops, 1280, 1.2, rng).astype(int), 4)
+    mems = {h: int(w) * 4 for h, w in enumerate(widths)}
+    loads = np.maximum(cov_list(n_hops, 30_000, 0.9, rng).astype(int), 16)
+    wl = linear_path_workload(n_hops, eval_flows=100, eval_packets=800,
+                              bg_packets_per_hop=loads, n_epochs=n_epochs,
+                              seed=seed)
+    return wl, Replayer(wl, n_hops), mems
+
+
+FLEET_KW = dict(blk=256, w_blk=512)
+
+
+@pytest.mark.parametrize("kind", ["cs", "cms"])
+def test_fleet_backend_identical_to_loop(kind):
+    """Full system on a multi-switch workload: counters, PEBs, the
+    equalization trajectory, and window queries all match exactly."""
+    wl, rep, mems = _small_workload()
+    loop = DiSketchSystem(mems, kind, rho_target=4.0, log2_te=wl.log2_te)
+    fleet = DiSketchSystem(mems, kind, rho_target=4.0, log2_te=wl.log2_te,
+                           backend="fleet", fleet_kwargs=FLEET_KW)
+    rep.run(loop)
+    rep.run(fleet)
+    assert loop.ns == fleet.ns
+    assert loop.n_log == fleet.n_log
+    for e in range(wl.n_epochs):
+        for sw in mems:
+            np.testing.assert_array_equal(loop.records[e][sw].counters,
+                                          fleet.records[e][sw].counters)
+        for sw in mems:
+            assert loop.peb_log[e][sw] == pytest.approx(
+                fleet.peb_log[e][sw], rel=1e-12)
+    keys = wl.keys[:50]
+    paths = [tuple(range(5))] * len(keys)
+    epochs = list(range(wl.n_epochs))
+    np.testing.assert_allclose(loop.query_flows(keys, paths, epochs),
+                               fleet.query_flows(keys, paths, epochs))
+
+
+def test_fleet_backend_disco():
+    """DISCO (no subepoching) also runs on the fleet engine: n stays 1."""
+    wl, rep, mems = _small_workload(n_epochs=2)
+    loop = DiscoSystem(mems, "cs", rho_target=0, log2_te=wl.log2_te)
+    fleet = DiscoSystem(mems, "cs", rho_target=0, log2_te=wl.log2_te,
+                        backend="fleet", fleet_kwargs=FLEET_KW)
+    rep.run(loop)
+    rep.run(fleet)
+    assert all(n == 1 for n in fleet.ns.values())
+    for sw in mems:
+        np.testing.assert_array_equal(loop.records[1][sw].counters,
+                                      fleet.records[1][sw].counters)
+
+
+def test_fleet_point_query_matches_fragment_merge():
+    """The batched query-side op over stacked counters == the per-record
+    merge='fragment' composite query (min for CMS, median for CS)."""
+    wl, rep, mems = _small_workload()
+    for kind in ("cs", "cms"):
+        sysf = DiSketchSystem(mems, kind, rho_target=4.0,
+                              log2_te=wl.log2_te, backend="fleet",
+                              fleet_kwargs=dict(keep_stacked=True,
+                                                **FLEET_KW))
+        rep.run(sysf)
+        keys = wl.keys[:64]
+        recs = [sysf.records[1][sw] for sw in sorted(mems)]
+        ref = Q.query_epoch(recs, keys, kind, merge="fragment")
+        np.testing.assert_allclose(sysf.fleet.point_query(1, keys), ref)
+
+
+def test_fleet_point_query_path_restriction():
+    """frag_sel / path= merges only on-path fragments: off-path fragments
+    would bias the min/median toward their near-zero collision values."""
+    wl, rep, mems = _small_workload()
+    sysf = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=wl.log2_te,
+                          backend="fleet",
+                          fleet_kwargs=dict(keep_stacked=True, **FLEET_KW))
+    rep.run(sysf)
+    # background flows cross only switch 2; query them on their true path
+    keys = wl.keys[:32]
+    path = (2,)
+    got = sysf.fleet.point_query(1, keys, path=path)
+    ref = Q.query_epoch([sysf.records[1][2]], keys, "cms",
+                        merge="fragment")
+    np.testing.assert_allclose(got, ref)
+    # unrestricted merge over all 5 fragments must differ (off-path min)
+    allfrag = sysf.fleet.point_query(1, keys)
+    assert (allfrag <= got + 1e-9).all()
+
+
+def test_fleet_overflow_guard():
+    """f32 counters are exact only below 2^24; the fleet must refuse to
+    return silently-corrupt counters instead of diverging from the loop."""
+    from repro.core.disketch import SwitchStream
+
+    k = np.full(8, 5, np.uint32)
+    st = SwitchStream(k, np.full(8, 1 << 23, np.int64),
+                      np.zeros(8, np.int64))
+    # cms: output-side check (counters are monotone non-negative)
+    sysf = DiSketchSystem({0: 1024}, "cms", rho_target=1e18,
+                          log2_te=LOG2_TE, backend="fleet",
+                          fleet_kwargs=FLEET_KW)
+    with pytest.raises(OverflowError, match="2\\^24"):
+        sysf.run_epoch(0, {0: st})
+    # cs: input-side |value|-mass bound (sign cancellation could hide an
+    # inexact intermediate peak from the output check)
+    syss = DiSketchSystem({0: 1024}, "cs", rho_target=1e18,
+                          log2_te=LOG2_TE, backend="fleet",
+                          fleet_kwargs=FLEET_KW)
+    with pytest.raises(OverflowError, match="mass"):
+        syss.run_epoch(0, {0: st})
+
+
+def test_peb_fleet_matches_peb_epoch():
+    keys, vals, ts, params, widths, nsubs = _fleet_inputs(5, 700, seed=3)
+    stacked = FK.fleet_update_loop(keys, vals, ts, params, n_sub_max=16,
+                                   width_max=1000, log2_te=LOG2_TE,
+                                   signed=True).astype(np.int64)
+    ns = params[:, FK.PARAM_N_SUB].astype(np.int64)
+    got = equalize.peb_fleet(stacked, ns, np.asarray(widths, np.int64),
+                             "cs")
+    from repro.core.fragment import EpochRecords
+    for f in range(5):
+        rec = EpochRecords(f, 0, int(ns[f]),
+                           stacked[f, :nsubs[f], :widths[f]], "cs", False)
+        assert got[f] == pytest.approx(equalize.peb_epoch(rec), rel=1e-12)
+
+
+def test_pack_streams_roundtrip():
+    wl, rep, _ = _small_workload(n_epochs=2)
+    streams = rep.epoch_stream(0)
+    pkt = rep.epoch_packet(0)
+    assert pkt is rep.epoch_packet(0)  # cached
+    assert pkt.offsets[0] == 0 and pkt.offsets[-1] == len(pkt.keys)
+    for i, sw in enumerate(pkt.frag_order):
+        lo, hi = int(pkt.offsets[i]), int(pkt.offsets[i + 1])
+        st = streams.get(sw)
+        if st is None:
+            assert lo == hi
+        else:
+            np.testing.assert_array_equal(pkt.keys[lo:hi], st.keys)
+            np.testing.assert_array_equal(pkt.ts[lo:hi], st.ts)
+    keys2d, vals2d, ts2d = pkt.densify(blk=256)
+    assert keys2d.shape[1] % 256 == 0
+    lens = pkt.seg_lengths()
+    for i in range(len(pkt.frag_order)):
+        assert not vals2d[i, int(lens[i]):].any()  # zero-value padding
+
+
+def test_fleet_rejects_unsupported_configs():
+    frags = {0: FragmentConfig(frag_id=0, kind="um", memory_bytes=1024)}
+    with pytest.raises(ValueError, match="cs or cms"):
+        FleetEpochRunner(frags, log2_te=LOG2_TE)
+    mixed = {0: FragmentConfig(frag_id=0, kind="cs", memory_bytes=1024),
+             1: FragmentConfig(frag_id=1, kind="cms", memory_bytes=1024)}
+    with pytest.raises(ValueError, match="homogeneous"):
+        FleetEpochRunner(mixed, log2_te=LOG2_TE)
+    frags = {0: FragmentConfig(frag_id=0, kind="cs", memory_bytes=1024,
+                               mitigation=True)}
+    with pytest.raises(ValueError, match="mitigation"):
+        FleetEpochRunner(frags, log2_te=LOG2_TE)
+    with pytest.raises(ValueError, match="backend"):
+        DiSketchSystem({0: 1024}, "cs", rho_target=1.0, log2_te=LOG2_TE,
+                       backend="warp")

@@ -44,6 +44,7 @@ def test_forward_shape_and_finite(setups, name):
     assert np.isfinite(float(aux))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ARCHS)
 def test_train_step_finite(setups, name):
     from repro.train.optimizer import cosine_schedule

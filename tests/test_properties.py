@@ -1,6 +1,11 @@
 """Hypothesis property-based tests for the system's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import hashing as H

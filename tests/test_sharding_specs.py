@@ -10,9 +10,19 @@ from repro.configs import SHAPES, get_config, list_configs
 from repro.launch import shardings as SH
 from repro.models import model as MDL
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across JAX versions: <=0.4.x takes a single
+    ((name, size), ...) shape tuple; newer releases take
+    (axis_sizes, axis_names) positionally."""
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(sizes), tuple(names))
+
+
 MESHES = {
-    "single": AbstractMesh((16, 16), ("data", "model")),
-    "multi": AbstractMesh((2, 16, 16), ("pod", "data", "model")),
+    "single": _abstract_mesh((16, 16), ("data", "model")),
+    "multi": _abstract_mesh((2, 16, 16), ("pod", "data", "model")),
 }
 
 
