@@ -2,14 +2,46 @@
 reference — wall-time here is CPU interpret-mode (correctness harness);
 the structural metrics (VMEM footprint, MXU utilization of the one-hot
 matmul recast) are computed analytically for the TPU target (§5 of the
-paper: the data plane must run at line rate)."""
+paper: the data plane must run at line rate).
+
+Also the CI gate for the fleet engine: ``python -m benchmarks.kernel_bench
+[--quick]`` writes every row to ``BENCH_kernel.json`` at the repo root
+and exits non-zero if any correctness column (``pallas_matches_ref``,
+``fleet_matches_loop``, ``ragged_matches_dense``) is false.
+"""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
 
 import numpy as np
 
 from .common import Timer, emit
+
+_MATCH_COLS = ("pallas_matches_ref", "fleet_matches_loop",
+               "ragged_matches_dense")
+
+
+def write_bench_json(rows) -> str:
+    """Persist the bench trajectory where CI (and the next PR) finds it."""
+    path = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                        "BENCH_kernel.json"))
+    with open(path, "w") as f:
+        json.dump({"bench": "kernel", "rows": rows}, f, indent=1,
+                  default=str)
+    return path
+
+
+def failing_rows(rows):
+    """Rows whose correctness columns are not all true."""
+    return [r for r in rows
+            if not all(bool(r[k]) for k in _MATCH_COLS if k in r)]
+
+
+def all_matches_ok(rows) -> bool:
+    return not failing_rows(rows)
 
 
 def vmem_bytes(blk: int, w_blk: int, n_sub: int) -> int:
@@ -48,7 +80,8 @@ def run(quick: bool = True):
                               **kw).block_until_ready()
         out_pal = sketch_update(jnp.asarray(keys), jnp.asarray(vals),
                                 jnp.asarray(ts), backend="pallas",
-                                interpret=True, blk=blk, w_blk=w_blk, **kw)
+                                interpret="auto", blk=blk, w_blk=w_blk,
+                                **kw)
         ok = bool(np.array_equal(np.asarray(out_ref),
                                  np.asarray(out_pal)))
         # TPU-target analytics: MXU work per packet block
@@ -64,7 +97,9 @@ def run(quick: bool = True):
                 t_ref.s / 3 / (p / 1000) * 1e6, 1),
         })
     emit("kernel_bench", rows)
-    rows += run_fleet(quick=quick)
+    rows = rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
+    path = write_bench_json(rows)
+    print(f"-> {path}")
     return rows
 
 
@@ -103,17 +138,17 @@ def run_fleet(quick: bool = True):
     pj = jnp.asarray(params)
 
     out_fleet = np.asarray(FK.fleet_update(kj, vj, tj, pj, blk=blk,
-                                           w_blk=w_blk, interpret=True,
+                                           w_blk=w_blk, interpret="auto",
                                            **kw))
     with Timer() as t_fleet:
         FK.fleet_update(kj, vj, tj, pj, blk=blk, w_blk=w_blk,
-                        interpret=True, **kw).block_until_ready()
+                        interpret="auto", **kw).block_until_ready()
     out_loop = FK.fleet_update_loop(keys, vals, ts, params,
-                                    backend="pallas", interpret=True,
+                                    backend="pallas", interpret="auto",
                                     blk=blk, w_blk=w_blk, **kw)
     with Timer() as t_loop:
         FK.fleet_update_loop(keys, vals, ts, params, backend="pallas",
-                             interpret=True, blk=blk, w_blk=w_blk, **kw)
+                             interpret="auto", blk=blk, w_blk=w_blk, **kw)
     total_pkts = n_frags * p
     # Interpret-mode caveat: the fleet pays its padding (every fragment
     # processed at width_max x n_sub_max) at full cost on CPU, while on
@@ -137,5 +172,87 @@ def run_fleet(quick: bool = True):
     return rows
 
 
+def run_fleet_ragged(quick: bool = True):
+    """Ragged CSR layout vs the PR-1 dense rectangle on a *skewed*
+    heterogeneous fleet — the dense layout's worst case.
+
+    One hot fragment dominates the epoch; the dense rectangle pads every
+    fragment to pow2(hottest segment) while the CSR stream pads each
+    segment to one ``blk`` boundary.  ``pad_work_x_*`` is padded packets
+    processed per live packet (the interpret-mode wall-time follows it,
+    and on TPU it is HBM traffic + grid steps); ``ragged_matches_dense``
+    / ``fleet_matches_loop`` pin bit-identity of all three paths on
+    heterogeneous widths/n_sub.
+    """
+    import jax.numpy as jnp
+    from repro.core.fleet import FleetPacket, pack_csr
+    from repro.kernels.sketch_update import fleet as FK
+
+    rng = np.random.RandomState(2)
+    blk, w_blk = 256, 2048
+    hot = 1 << (13 if quick else 15)
+    lens = [hot, 128, 64, 256, 32, 512, 128, 64]
+    widths = [2048, 256, 512, 1024, 128, 2048, 256, 512]
+    nsubs = [8, 2, 4, 16, 1, 8, 2, 4]
+    n_frags = len(lens)
+    offsets = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    p_live = int(offsets[-1])
+    pkt = FleetPacket(
+        keys=rng.randint(0, 1 << 20, p_live).astype(np.uint32),
+        values=np.ones(p_live, np.int64),
+        ts=rng.randint(0, 1 << 16, p_live).astype(np.int64),
+        offsets=offsets, frag_order=tuple(range(n_frags)))
+    params = np.zeros((n_frags, FK.N_PARAMS), np.int32)
+    for f in range(n_frags):
+        params[f, FK.PARAM_COL_SEED] = 101 + f
+        params[f, FK.PARAM_SIGN_SEED] = 202 + f
+        params[f, FK.PARAM_SUB_SEED] = 303 + f
+        params[f, FK.PARAM_WIDTH] = widths[f]
+        params[f, FK.PARAM_N_SUB] = nsubs[f]
+        params[f, FK.PARAM_LOG2_N_SUB] = nsubs[f].bit_length() - 1
+    kw = dict(n_sub_max=max(nsubs), width_max=max(widths), log2_te=16,
+              signed=True, w_blk=w_blk, interpret="auto")
+
+    fkeys, fvals, fts, block_frag = pack_csr([pkt], blk)
+    args_r = (jnp.asarray(fkeys), jnp.asarray(fvals), jnp.asarray(fts),
+              jnp.asarray(params), jnp.asarray(block_frag))
+    out_ragged = np.asarray(FK.fleet_update_ragged(*args_r, blk=blk, **kw))
+    with Timer() as t_ragged:
+        FK.fleet_update_ragged(*args_r, blk=blk, **kw).block_until_ready()
+
+    dkeys, dvals, dts = pkt.densify(blk)
+    args_d = (jnp.asarray(dkeys), jnp.asarray(dvals), jnp.asarray(dts),
+              jnp.asarray(params))
+    out_dense = np.asarray(FK.fleet_update(*args_d, blk=blk, **kw))
+    with Timer() as t_dense:
+        FK.fleet_update(*args_d, blk=blk, **kw).block_until_ready()
+
+    out_loop = FK.fleet_update_loop(
+        dkeys, dvals, dts, params, backend="ref",
+        **{k: v for k, v in kw.items() if k not in ("w_blk", "interpret")})
+
+    rows = [{
+        "bench": "ragged_vs_dense_skewed",
+        "n_frags": n_frags,
+        "live_pkts": p_live,
+        "hot_seg": hot,
+        "ragged_matches_dense": bool(np.array_equal(out_ragged, out_dense)),
+        "fleet_matches_loop": bool(np.array_equal(out_dense, out_loop)),
+        "pad_work_x_dense": round(dkeys.size / p_live, 2),
+        "pad_work_x_ragged": round(fkeys.size / p_live, 3),
+        "ragged_pkts_per_s": round(p_live / t_ragged.s),
+        "dense_pkts_per_s": round(p_live / t_dense.s),
+        "ragged_speedup_x": round(t_dense.s / t_ragged.s, 2),
+    }]
+    emit("kernel_bench_ragged", rows)
+    return rows
+
+
 if __name__ == "__main__":
-    run(quick=False)
+    quick = "--quick" in sys.argv
+    bad = failing_rows(run(quick=quick))
+    if bad:
+        bad = [{k: r[k] for k in ("bench", *_MATCH_COLS) if k in r}
+               for r in bad]
+        print(f"FAIL: kernel/fleet outputs diverged: {bad}", file=sys.stderr)
+        sys.exit(1)

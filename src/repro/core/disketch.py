@@ -38,9 +38,17 @@ class DiSketchSystem:
         ``process_epoch`` per switch (supports every kind + §4.4
         mitigation);
       * ``"fleet"`` — one batched Pallas dispatch updates all fragments
-        (``core.fleet.FleetEpochRunner``); bit-identical counters for
-        cs/cms without mitigation.  ``fleet_kwargs`` are forwarded to the
-        runner (blk, w_blk, interpret, keep_stacked).
+        (``core.fleet.FleetEpochRunner``, ragged CSR layout);
+        bit-identical counters for cs/cms without mitigation.
+        ``fleet_kwargs`` are forwarded to the runner (blk, w_blk,
+        interpret, keep_stacked, layout).
+
+    The fleet backend additionally supports *window mode*
+    (``run_window`` / ``Replayer.run(system, window=E)``): E consecutive
+    epochs in one super-dispatch with the subepoch counts frozen per
+    window — a throughput/control-latency trade the paper's §4.2
+    tolerates ("within a factor of two"); per-epoch control stays the
+    default.
     """
 
     name = "disketch"
@@ -113,6 +121,41 @@ class DiSketchSystem:
             recs[sw] = rec
             pebs[sw] = equalize.peb_epoch(rec)
         return recs, pebs
+
+    def run_window(self, epoch0: int,
+                   streams_list: Sequence[Dict[int, SwitchStream]],
+                   packets: Optional[Sequence] = None) -> None:
+        """Process ``len(streams_list)`` consecutive epochs starting at
+        ``epoch0`` in ONE fleet super-dispatch (window mode).
+
+        ``ns`` is frozen across the window for the kernel; at the window
+        boundary the observed per-epoch PEBs are replayed through Eq. 6
+        in order, so the control trajectory still reacts to every epoch
+        (just with window-granularity latency).  ``packets`` (prepacked
+        ``FleetPacket``s, e.g. from ``Replayer.epoch_packet``) skip
+        re-packing.  Non-fleet backends fall back to per-epoch
+        processing (exact per-epoch control).
+        """
+        if self.backend != "fleet":
+            for e, streams in enumerate(streams_list):
+                self.run_epoch(epoch0 + e, streams)
+            return
+        from .fleet import pack_streams
+
+        ns = (dict(self.ns) if self.subepoching
+              else {sw: 1 for sw in self.fragments})
+        if packets is None:
+            packets = [pack_streams(st, self.fleet.frag_order)
+                       for st in streams_list]
+        recs_list, pebs_list = self.fleet.run_window(epoch0, ns, packets)
+        for e, (recs, pebs) in enumerate(zip(recs_list, pebs_list)):
+            self.records[epoch0 + e] = recs
+            self.peb_log.append(pebs)
+            if self.subepoching:
+                for sw, peb in pebs.items():
+                    self.ns[sw] = equalize.next_n(self.ns[sw], peb,
+                                                  self.rho_target)
+            self.n_log.append(dict(self.ns))
 
     # -- query plane --------------------------------------------------------
 

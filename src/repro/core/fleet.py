@@ -1,30 +1,45 @@
-"""Fleet execution engine: one batched device dispatch per network epoch.
+"""Fleet execution engine: one batched device dispatch per network epoch
+— or per multi-epoch *window*.
 
 ``DiSketchSystem.run_epoch`` originally walked switches in a Python loop,
 calling the numpy fragment path once per switch — correct, but serialized
-exactly where the ROADMAP demands line-rate throughput.  This module packs
-every switch's epoch stream into one dense packet rectangle and updates
-*all* fragments with a single ``fleet_update`` kernel launch
-(repro.kernels.sketch_update.fleet), then unpacks the stacked counters
-into the same per-fragment ``EpochRecords`` the query plane already
-consumes.  The error-equalization control loop (§4.2) reads its PEBs
-directly from the stacked output (``equalize.peb_fleet``).  Host-side,
-the per-epoch cost is one vectorized pack/densify copy of the packet
-stream (the compact packed form is built once per epoch by
-``Replayer.epoch_packet`` and cached; the padded dense rectangle is a
-transient) plus O(n_frags) bookkeeping — no per-packet Python work.
+exactly where the ROADMAP demands line-rate throughput.  This module
+packs every switch's epoch stream into one flat blk-aligned CSR stream
+(``pack_csr``: per-fragment segments + a block->fragment map, waste
+<= blk per fragment) and updates *all* fragments with a single
+``fleet_update_ragged`` kernel launch (repro.kernels.sketch_update.fleet),
+then unpacks the stacked counters into the same per-fragment
+``EpochRecords`` the query plane already consumes.  The
+error-equalization control loop (§4.2) reads its PEBs directly from the
+stacked output (``equalize.peb_fleet``).  Host-side, the per-epoch cost
+is one vectorized scatter of the packet stream into its blk-aligned
+destinations (pure numpy index arithmetic, no per-fragment Python
+copies) plus O(n_frags) bookkeeping — no per-packet Python work.
+
+**Epoch-window super-dispatch** (``FleetEpochRunner.run_window``): since
+the kernel reads per-row seeds/width/n_sub from the parameter table, E
+epochs x F fragments are just E*F param rows.  A whole control window is
+dispatched in one launch with ``ns`` frozen for the window (§4.2 is
+"within a factor of two" forgiving; per-epoch control stays the
+default).  Counters stay device-resident across the window: the overflow
+peak and the per-row PEBs are computed on-device, and the single host
+transfer + int64 conversion + record unpacking happen lazily, once per
+window, on first query-plane access (``WindowRecords``).
 
 Numerical contract: for ``cs``/``cms`` fragments without §4.4 mitigation,
 the fleet path produces bit-identical counters to the per-switch loop
-(same ``frag_seed`` derivation, same hash arithmetic in-kernel; validated
-in tests/test_fleet.py).  UnivMon and mitigation stay on the loop backend
+(same ``frag_seed`` derivation, same hash arithmetic in-kernel) and the
+ragged CSR layout is bit-identical to the PR-1 dense rectangle
+(``layout="dense"``, kept as an oracle/baseline); validated in
+tests/test_fleet.py.  UnivMon and mitigation stay on the loop backend
 for now (per-level scatter and the second-subepoch mask are not yet
 batched).
 """
 from __future__ import annotations
 
+from collections.abc import Mapping
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -102,6 +117,63 @@ def pack_streams(streams: Dict[int, "SwitchStream"],
                        tuple(frag_order))
 
 
+def _bucket_blocks(nb: int, floor: int = 32) -> int:
+    """Round a block count up to a shape bucket: exact below ``floor``,
+    then 16 buckets per octave (padded blocks <= 6.25%), so the jit'd
+    ragged kernel sees O(log P) distinct shapes across a replay instead
+    of one compile per epoch."""
+    if nb <= floor:
+        return nb
+    q = 1 << max(int(nb - 1).bit_length() - 5, 0)
+    return -(-nb // q) * q
+
+
+def pack_csr(packets: Sequence[FleetPacket], blk: int = 256,
+             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized CSR packing for the ragged fleet kernel.
+
+    Concatenates E epochs' ``FleetPacket``s into one flat stream whose
+    *rows* are (epoch, fragment) pairs in epoch-major order
+    (``row = e * n_frags + f``; E = 1 is the plain per-epoch case).
+    Each row's segment is padded to a ``blk`` boundary with value-0
+    packets and owns at least one block — empty rows cost exactly one
+    zero block, which is what guarantees the kernel initializes every
+    counter tile.  No per-fragment Python copies: destinations are
+    computed with index arithmetic and one fancy-indexed scatter.
+
+    Returns ``(keys, vals, ts, block_frag)``: ``(n_blocks * blk,)``
+    uint32/float32/uint32 streams plus the non-decreasing
+    ``(n_blocks,)`` int32 block->row map (trailing shape-bucket padding
+    blocks map to the last row).
+    """
+    assert len(packets) >= 1
+    n_rows = sum(p.n_frags for p in packets)
+    lens = (np.concatenate([p.seg_lengths() for p in packets])
+            .astype(np.int64))
+    nblk = np.maximum(1, -(-lens // blk))
+    row_blk_off = np.concatenate([[0], np.cumsum(nblk)])
+    nb_live = int(row_blk_off[-1])
+    nb = _bucket_blocks(nb_live)
+    p_tot = nb * blk
+    keys = np.zeros(p_tot, np.uint32)
+    vals = np.zeros(p_tot, np.float32)
+    ts = np.zeros(p_tot, np.uint32)
+    src_keys = np.concatenate([p.keys for p in packets])
+    src_vals = np.concatenate([p.values for p in packets])
+    src_ts = np.concatenate([p.ts for p in packets])
+    row_src_off = np.concatenate([[0], np.cumsum(lens)])
+    dst = (np.arange(len(src_keys), dtype=np.int64)
+           - np.repeat(row_src_off[:-1], lens)
+           + np.repeat(row_blk_off[:-1] * blk, lens))
+    keys[dst] = src_keys
+    vals[dst] = src_vals
+    ts[dst] = src_ts
+    block_frag = np.full(nb, max(n_rows - 1, 0), np.int32)
+    block_frag[:nb_live] = np.repeat(np.arange(n_rows, dtype=np.int32),
+                                     nblk)
+    return keys, vals, ts, block_frag
+
+
 def build_params(fragments: Dict[int, FragmentConfig], epoch: int,
                  ns: Dict[int, int],
                  frag_order: Sequence[int]) -> np.ndarray:
@@ -125,18 +197,94 @@ def build_params(fragments: Dict[int, FragmentConfig], epoch: int,
     return params
 
 
+class _WindowBuffer:
+    """Device-resident stacked counters for one epoch window.
+
+    Holds the raw ``(E, F, n_sub_max, width_max)`` f32 device array; the
+    host transfer + int64 conversion happens exactly once, on first
+    ``host()`` call, after which the device buffer is released.
+    """
+
+    def __init__(self, dev, shape: Tuple[int, ...]):
+        self._dev = dev
+        self._shape = shape
+        self._host: Optional[np.ndarray] = None
+
+    def host(self) -> np.ndarray:
+        if self._host is None:
+            self._host = (np.asarray(self._dev).astype(np.int64)
+                          .reshape(self._shape))
+            self._dev = None
+        return self._host
+
+
+class WindowRecords(Mapping):
+    """Lazy ``{switch: EpochRecords}`` view over one epoch of a window.
+
+    The query plane consumes ``records[epoch][sw]``; materializing the
+    records triggers the window's single host transfer (shared through
+    ``_WindowBuffer``) and builds counters as *views* of the window
+    stack — no per-fragment copies.  Epochs nobody queries never leave
+    the device.
+    """
+
+    def __init__(self, buf: _WindowBuffer, e_idx: int, epoch: int,
+                 fragments: Dict[int, FragmentConfig],
+                 frag_order: Tuple[int, ...], n_arr: np.ndarray):
+        self._buf = buf
+        self._e = e_idx
+        self._epoch = epoch
+        self._fragments = fragments
+        self._order = frag_order
+        self._n = n_arr
+        self._recs: Optional[Dict[int, EpochRecords]] = None
+
+    def _materialize(self) -> Dict[int, EpochRecords]:
+        if self._recs is None:
+            stack = self._buf.host()[self._e]
+            self._recs = {}
+            for i, sw in enumerate(self._order):
+                cfg = self._fragments[sw]
+                n = int(self._n[i])
+                self._recs[sw] = EpochRecords(
+                    cfg.frag_id, self._epoch, n,
+                    stack[i, :n, :cfg.width], cfg.kind, cfg.mitigation,
+                    cfg.base_seed)
+        return self._recs
+
+    def __getitem__(self, sw: int) -> EpochRecords:
+        return self._materialize()[sw]
+
+    def __iter__(self):
+        return iter(self._order)
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    def __contains__(self, sw) -> bool:      # avoid materializing on `in`
+        return sw in self._fragments
+
+
 class FleetEpochRunner:
     """Batched replacement for the per-switch loop in ``run_epoch``.
 
-    Holds the fleet's static configuration, packs each epoch's streams,
-    dispatches one ``fleet_update``, and unpacks ``EpochRecords`` + PEBs.
-    ``keep_stacked=True`` additionally retains the raw stacked counters
-    per epoch for ``point_query`` (the batched query-side op).
+    Holds the fleet's static configuration, packs each epoch's streams
+    into the ragged CSR layout (``layout="dense"`` keeps the PR-1
+    rectangle as an oracle), dispatches one ``fleet_update_ragged``, and
+    unpacks ``EpochRecords`` + PEBs.  ``run_window`` batches E epochs
+    into one super-dispatch with frozen ``ns`` and device-resident
+    counters.  ``keep_stacked=True`` additionally retains the raw
+    stacked counters per epoch for ``point_query``/``window_query`` (the
+    batched query-side ops).  ``interpret="auto"`` (default) compiles on
+    TPU and interprets on CPU.
     """
 
     def __init__(self, fragments: Dict[int, FragmentConfig], log2_te: int,
                  *, blk: int = 256, w_blk: int = 2048,
-                 interpret: bool = True, keep_stacked: bool = False):
+                 interpret="auto", keep_stacked: bool = False,
+                 layout: str = "ragged"):
+        if layout not in ("ragged", "dense"):
+            raise ValueError(f"unknown layout {layout!r}")
         kinds = {cfg.kind for cfg in fragments.values()}
         if kinds - {"cs", "cms"} or len(kinds) > 1:
             raise ValueError(
@@ -153,28 +301,27 @@ class FleetEpochRunner:
         self.w_blk = w_blk
         self.interpret = interpret
         self.keep_stacked = keep_stacked
+        self.layout = layout
         self.frag_order: Tuple[int, ...] = tuple(sorted(fragments))
         self.widths = np.array([fragments[sw].width
                                 for sw in self.frag_order], np.int64)
         self.stacked: Dict[int, np.ndarray] = {}
         self._params_log: Dict[int, np.ndarray] = {}
 
-    def run_epoch(self, epoch: int, ns: Dict[int, int],
-                  streams: Dict[int, "SwitchStream"],
-                  packet: Optional[FleetPacket] = None,
-                  ) -> Tuple[Dict[int, EpochRecords], Dict[int, float]]:
-        from ..kernels.sketch_update.fleet import (PARAM_N_SUB, fleet_update)
+    # Exactness bound.  Counters are f32 accumulations: exact while
+    # every intermediate magnitude stays below 2^24.  For unsigned (cms)
+    # counters the final value is the peak, so a cheap output check
+    # suffices (``_check_output_peak``); for signed (cs) counters
+    # cancellation can hide an inexact intermediate peak, so bound it by
+    # the only sound input-side quantity: the fragment's total |value|
+    # mass (``_check_input_mass``).
 
-        if packet is None:
-            packet = pack_streams(streams, self.frag_order)
-        assert packet.frag_order == self.frag_order
-        # Exactness bound.  Counters are f32 accumulations: exact while
-        # every intermediate magnitude stays below 2^24.  For unsigned
-        # (cms) counters the final value is the peak, so a cheap output
-        # check suffices (below); for signed (cs) counters cancellation
-        # can hide an inexact intermediate peak, so bound it by the only
-        # sound input-side quantity: the fragment's total |value| mass.
-        if self.kind == "cs" and len(packet.values):
+    def _check_input_mass(self, packets: Sequence[FleetPacket]) -> None:
+        if self.kind != "cs":
+            return
+        for packet in packets:
+            if not len(packet.values):
+                continue
             cum = np.concatenate([[0], np.cumsum(np.abs(packet.values))])
             seg_mass = cum[packet.offsets[1:]] - cum[packet.offsets[:-1]]
             if seg_mass.max(initial=0) >= 2 ** 24:
@@ -182,25 +329,52 @@ class FleetEpochRunner:
                     f"per-fragment |value| mass {seg_mass.max():.3g} "
                     "exceeds the f32 exact-integer range (2^24); use "
                     "backend='loop' or shorten the epoch")
-        keys, vals, ts = packet.densify(self.blk)
-        params = build_params(self.fragments, epoch, ns, self.frag_order)
-        n_arr = params[:, PARAM_N_SUB].astype(np.int64)
-        n_sub_max = int(n_arr.max(initial=1))
-        width_max = int(self.widths.max(initial=4))
 
-        stacked_f32 = np.asarray(fleet_update(
-            keys, vals, ts, params, n_sub_max=n_sub_max,
-            width_max=width_max, log2_te=self.log2_te,
-            signed=self.kind == "cs", blk=self.blk, w_blk=self.w_blk,
-            interpret=self.interpret))
-        # Output-side exactness check (tight for cms, where counters are
-        # monotone non-negative and the final value is the peak).
-        peak = float(np.abs(stacked_f32).max(initial=0.0))
+    @staticmethod
+    def _check_output_peak(peak: float) -> None:
         if peak >= 2 ** 24:
             raise OverflowError(
                 f"fleet counter magnitude {peak:.3g} exceeds the f32 "
                 "exact-integer range (2^24); use backend='loop' or "
                 "shorten the epoch")
+
+    def _dispatch(self, params: np.ndarray, packets: Sequence[FleetPacket],
+                  n_sub_max: int, width_max: int):
+        """One device launch over the param table's rows; returns the
+        still-on-device (n_rows, n_sub_max, width_max) f32 stack."""
+        from ..kernels.sketch_update import fleet as FK
+
+        kw = dict(n_sub_max=n_sub_max, width_max=width_max,
+                  log2_te=self.log2_te, signed=self.kind == "cs",
+                  blk=self.blk, w_blk=self.w_blk, interpret=self.interpret)
+        if self.layout == "dense":
+            if len(packets) != 1:
+                raise ValueError("dense layout is per-epoch only; "
+                                 "window dispatch requires layout='ragged'")
+            keys, vals, ts = packets[0].densify(self.blk)
+            return FK.fleet_update(keys, vals, ts, params, **kw)
+        keys, vals, ts, block_frag = pack_csr(packets, self.blk)
+        return FK.fleet_update_ragged(keys, vals, ts, params, block_frag,
+                                      **kw)
+
+    def run_epoch(self, epoch: int, ns: Dict[int, int],
+                  streams: Dict[int, "SwitchStream"],
+                  packet: Optional[FleetPacket] = None,
+                  ) -> Tuple[Dict[int, EpochRecords], Dict[int, float]]:
+        from ..kernels.sketch_update.fleet import PARAM_N_SUB
+
+        if packet is None:
+            packet = pack_streams(streams, self.frag_order)
+        assert packet.frag_order == self.frag_order
+        self._check_input_mass([packet])
+        params = build_params(self.fragments, epoch, ns, self.frag_order)
+        n_arr = params[:, PARAM_N_SUB].astype(np.int64)
+        n_sub_max = int(n_arr.max(initial=1))
+        width_max = int(self.widths.max(initial=4))
+
+        stacked_f32 = np.asarray(self._dispatch(params, [packet],
+                                                n_sub_max, width_max))
+        self._check_output_peak(float(np.abs(stacked_f32).max(initial=0.0)))
         stacked = stacked_f32.astype(np.int64)
 
         pebs_arr = equalize.peb_fleet(stacked, n_arr, self.widths, self.kind)
@@ -219,6 +393,61 @@ class FleetEpochRunner:
             self._params_log[epoch] = params
         return recs, pebs
 
+    def run_window(self, epoch0: int, ns: Dict[int, int],
+                   packets: Sequence[FleetPacket],
+                   ) -> Tuple[List[WindowRecords], List[Dict[int, float]]]:
+        """Epoch-window super-dispatch: E epochs x F fragments in ONE
+        kernel launch (E*F virtual param rows), ``ns`` frozen for the
+        window.
+
+        Counters stay device-resident: only the overflow peak (one
+        scalar) and the (E*F,) PEB vector cross the host boundary here;
+        the full stack transfers lazily, once per window, when the query
+        plane first touches a ``WindowRecords``.
+        """
+        import jax.numpy as jnp
+
+        from ..kernels.sketch_update.fleet import PARAM_N_SUB
+
+        e_count = len(packets)
+        assert e_count >= 1
+        for packet in packets:
+            assert packet.frag_order == self.frag_order
+        if self.layout != "ragged":
+            raise ValueError("window dispatch requires layout='ragged'")
+        self._check_input_mass(packets)
+        n_frags = len(self.frag_order)
+        params = np.concatenate([
+            build_params(self.fragments, epoch0 + e, ns, self.frag_order)
+            for e in range(e_count)])
+        n_arr = params[:n_frags, PARAM_N_SUB].astype(np.int64)  # frozen
+        n_sub_max = int(params[:, PARAM_N_SUB].max(initial=1))
+        width_max = int(self.widths.max(initial=4))
+
+        out = self._dispatch(params, packets, n_sub_max, width_max)
+        self._check_output_peak(
+            float(jnp.max(jnp.abs(out))) if out.size else 0.0)
+        pebs_all = np.asarray(equalize.peb_fleet_device(
+            out, np.tile(n_arr, e_count), np.tile(self.widths, e_count),
+            self.kind)).reshape(e_count, n_frags)
+
+        buf = _WindowBuffer(out, (e_count, n_frags, n_sub_max, width_max))
+        recs_list: List[WindowRecords] = []
+        pebs_list: List[Dict[int, float]] = []
+        for e in range(e_count):
+            recs_list.append(WindowRecords(buf, e, epoch0 + e,
+                                           self.fragments, self.frag_order,
+                                           n_arr))
+            pebs_list.append({sw: float(pebs_all[e, i])
+                              for i, sw in enumerate(self.frag_order)})
+        if self.keep_stacked:
+            host = buf.host()
+            for e in range(e_count):
+                self.stacked[epoch0 + e] = host[e]
+                self._params_log[epoch0 + e] = \
+                    params[e * n_frags:(e + 1) * n_frags]
+        return recs_list, pebs_list
+
     def point_query(self, epoch: int, keys: np.ndarray,
                     path: Optional[Sequence[int]] = None) -> np.ndarray:
         """Batched epoch point-query over the retained stacked counters.
@@ -228,23 +457,24 @@ class FleetEpochRunner:
         Omitting it merges every fleet fragment, which is only correct
         when flows traverse all of them (linear-path scenarios).
         """
+        return self.window_query([epoch], keys, path=path)
+
+    def window_query(self, epochs: Sequence[int], keys: np.ndarray,
+                     path: Optional[Sequence[int]] = None) -> np.ndarray:
+        """Batched point-query summed over a query window (O_Q = Sum(O))
+        on the retained stacked counters — the fleet twin of
+        ``query.query_window(merge="fragment")``."""
         from . import query as Q
 
-        if epoch not in self.stacked:
-            raise KeyError(f"epoch {epoch} not retained "
+        missing = [e for e in epochs if e not in self.stacked]
+        if missing:
+            raise KeyError(f"epochs {missing} not retained "
                            "(construct with keep_stacked=True)")
-        from ..kernels.sketch_update import fleet as FK
-
         frag_sel = None
         if path is not None:
             on_path = set(path)
             frag_sel = np.array([sw in on_path for sw in self.frag_order])
-        p = self._params_log[epoch]
-        return Q.fleet_query_epoch(
-            self.stacked[epoch],
-            col_seeds=p[:, FK.PARAM_COL_SEED].astype(np.int64),
-            sign_seeds=p[:, FK.PARAM_SIGN_SEED].astype(np.int64),
-            sub_seeds=p[:, FK.PARAM_SUB_SEED].astype(np.int64),
-            ns=p[:, FK.PARAM_N_SUB].astype(np.int64),
-            widths=self.widths, keys=keys, kind=self.kind,
-            frag_sel=frag_sel)
+        return Q.fleet_query_window(
+            [self.stacked[e] for e in epochs],
+            [self._params_log[e] for e in epochs],
+            self.widths, keys, self.kind, frag_sel=frag_sel)

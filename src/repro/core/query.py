@@ -181,6 +181,34 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
     return np.median(raw, axis=0)
 
 
+def fleet_query_window(stacked_by_epoch: Sequence[np.ndarray],
+                       params_by_epoch: Sequence[np.ndarray],
+                       widths: np.ndarray, keys: np.ndarray, kind: str,
+                       frag_sel: Optional[np.ndarray] = None) -> np.ndarray:
+    """Window point-query over fleet stacks: O_Q = Sum(O) of per-epoch
+    batched queries — the fleet twin of ``query_window`` with
+    ``merge="fragment"``.
+
+    ``params_by_epoch`` carries each epoch's ``(n_frags, N_PARAMS)``
+    fleet parameter table (seeds are per-epoch, so the table differs
+    every epoch even for a static fleet); ``frag_sel`` restricts every
+    epoch's merge to the on-path fragments, as in ``fleet_query_epoch``.
+    """
+    from ..kernels.sketch_update import fleet as FK
+
+    keys = np.asarray(keys, dtype=np.uint32)
+    out = np.zeros(len(keys))
+    for stacked, p in zip(stacked_by_epoch, params_by_epoch):
+        out += fleet_query_epoch(
+            stacked,
+            col_seeds=p[:, FK.PARAM_COL_SEED].astype(np.int64),
+            sign_seeds=p[:, FK.PARAM_SIGN_SEED].astype(np.int64),
+            sub_seeds=p[:, FK.PARAM_SUB_SEED].astype(np.int64),
+            ns=p[:, FK.PARAM_N_SUB].astype(np.int64),
+            widths=widths, keys=keys, kind=kind, frag_sel=frag_sel)
+    return out
+
+
 def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],
                  keys: np.ndarray, kind: str,
                  single_hop: Optional[np.ndarray] = None,

@@ -1,36 +1,59 @@
-"""Fleet-level Pallas kernel: update *all* fragments of a network epoch
-in one device dispatch (the batched data plane).
+"""Fleet-level Pallas kernels: update *all* fragments of a network epoch
+(or a whole multi-epoch *window*) in one device dispatch.
 
 ``kernel.py`` updates one fragment per ``pallas_call``; a network has
 hundreds of fragments and a Python loop over them serializes the epoch
 (host dispatch latency dominates, and no cross-fragment batching reaches
-the MXU).  This module extends the one-hot-matmul histogram with a
-*fragment grid axis*:
+the MXU).  Two batched layouts live here, both reusing the same
+``block_contrib`` one-hot-matmul body:
 
-    grid = (n_frags, width_blocks, packet_blocks)
+**Ragged CSR layout (``fleet_update_ragged``, the hot path).**  Every
+fragment's stream is a *segment* of one flat ``(P_total,)`` packet
+stream, padded only to a ``blk`` boundary (waste <= blk per fragment),
+and the grid is::
 
-Packets are packed host-side into a dense ``(n_frags, p_max)`` rectangle
-(each row = one fragment's epoch stream, zero-value padded; see
-``repro.core.fleet.pack_streams``).  Per-fragment parameters — the three
-hash seeds, the hash width, the subepoch count — ride in a small
-``(n_frags, 8)`` int32 table and are read inside the kernel, so fragments
-with *heterogeneous* widths and subepoch counts share one launch:
+    grid = (width_blocks, packet_blocks_total)
 
-  * columns are hashed modulo the fragment's true width (a traced scalar;
-    Lemire fast-range works unchanged with a dynamic modulus), so columns
+A scalar-prefetched ``block_frag`` map (``(packet_blocks_total,)``
+int32, non-decreasing) names the fragment that owns each packet block;
+the BlockSpec index maps gather that fragment's parameter row and
+counter tile, so heterogeneous fragments never pay for the hottest
+fragment's padding (the dense rectangle's ``pad_work_x``).  A counter
+tile is zero-initialized when its first packet block arrives (the map
+changes value), which requires every fragment to own >= 1 block — the
+host-side packer (``repro.core.fleet.pack_csr``) guarantees it.
+
+Because per-fragment parameters (seeds, width, n_sub) are just rows of
+the table, E epochs x F fragments are simply E*F rows: the *epoch-window
+super-dispatch* reuses this kernel unchanged with virtual rows
+``e * n_frags + f`` (see ``repro.core.fleet.FleetEpochRunner.run_window``).
+
+**Dense rectangle (``fleet_update``, kept as oracle/baseline).**  The
+PR-1 layout: packets packed into a ``(n_frags, p_max)`` rectangle with
+``grid = (n_frags, width_blocks, packet_blocks)``; every fragment pays
+``pow2(hottest segment)`` padded packets.  Bit-identical to the ragged
+path (same param table, same in-kernel hashing) and benchmarked against
+it in benchmarks/kernel_bench.py.
+
+Shared machinery:
+
+  * per-fragment parameters — the three hash seeds, the hash width, the
+    subepoch count — ride in a small ``(n_rows, 8)`` int32 table and are
+    read in-kernel as traced scalars;
+  * columns are hashed modulo the fragment's true width (Lemire
+    fast-range works unchanged with a dynamic modulus), so columns
     beyond ``width[f]`` are never written;
-  * the packet/flow subepoch ids are masked by ``n_sub[f] - 1`` (a traced
-    scalar), so rows beyond ``n_sub[f]`` are never written;
-  * the stacked output is ``(n_frags, n_sub_max, width_max)`` with exact
-    zeros outside each fragment's live ``[:n_sub[f], :width[f]]`` block.
-
-Padding packets carry ``value = 0`` and therefore contribute nothing
-(one-hot x 0 = 0), the same trick the single-fragment path uses.
+  * the packet/flow subepoch ids are masked by ``n_sub[f] - 1``, so rows
+    beyond ``n_sub[f]`` are never written;
+  * the stacked output is ``(n_rows, n_sub_max, width_max)`` with exact
+    zeros outside each fragment's live ``[:n_sub[f], :width[f]]`` block;
+  * padding packets carry ``value = 0`` and contribute nothing
+    (one-hot x 0 = 0).
 
 VMEM budget per grid step is unchanged from the single-fragment kernel
-(the fragment axis only selects which counter tile is resident):
-3*BLK*4 B packet block + BLK*W_BLK*4 B one-hot + N_SUB_MAX*W_BLK*4 B
-counter tile.  See docs/kernels.md for the full derivation.
+(the fragment axis only selects which counter tile is resident); the
+ragged path adds the block->fragment map in SMEM (4 B per packet block).
+See docs/kernels.md for the full derivation.
 """
 from __future__ import annotations
 
@@ -40,8 +63,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from .kernel import block_contrib
+from .kernel import block_contrib, resolve_interpret
 
 # Columns of the per-fragment int32 parameter table.
 PARAM_COL_SEED = 0
@@ -118,7 +142,7 @@ def fleet_update_pallas(keys, vals, ts, params, *, n_sub_max: int,
     "interpret"))
 def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
                  log2_te: int, signed: bool = True, blk: int = 1024,
-                 w_blk: int = 2048, interpret: bool = True):
+                 w_blk: int = 2048, interpret="auto"):
     """Compute all subepoch-record counters for a whole fleet epoch.
 
     Args:
@@ -133,6 +157,7 @@ def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
     integers while |c| < 2^24); entries outside a fragment's live
     ``[:n_sub[f], :width[f]]`` block are exactly zero.
     """
+    interpret = resolve_interpret(interpret)
     n_frags, p = keys.shape
     pad_p = (-p) % blk
     if pad_p:
@@ -148,6 +173,125 @@ def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
         log2_te=log2_te, signed=signed, blk=blk, w_blk=w_blk,
         interpret=interpret)
     return out[:, :, :width_max]
+
+
+def fleet_ragged_kernel(block_frag_ref, params_ref, keys_ref, vals_ref,
+                        ts_ref, out_ref, *, w_blk: int, n_sub_max: int,
+                        log2_te: int, signed: bool):
+    """Ragged CSR body: one packet block of the flat stream, applied to
+    its owning fragment's counter tile (selected by the BlockSpec index
+    maps from the scalar-prefetched ``block_frag`` map)."""
+    wi = pl.program_id(0)   # width-block index
+    pj = pl.program_id(1)   # packet-block index (sequential reduction)
+
+    cur = block_frag_ref[pj]
+    prev = block_frag_ref[jnp.maximum(pj - 1, 0)]
+
+    # First packet block of this fragment: zero its counter tile.  The
+    # map is non-decreasing and every fragment owns >= 1 block, so every
+    # output tile is initialized exactly once per width block.
+    @pl.when((pj == 0) | (cur != prev))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    params = params_ref[...][0]                     # (N_PARAMS,) int32
+    contrib = block_contrib(
+        keys_ref[...].astype(jnp.uint32),
+        vals_ref[...].astype(jnp.float32),
+        ts_ref[...].astype(jnp.uint32),
+        col_seed=params[PARAM_COL_SEED].astype(jnp.uint32),
+        sign_seed=params[PARAM_SIGN_SEED].astype(jnp.uint32),
+        sub_seed=params[PARAM_SUB_SEED].astype(jnp.uint32),
+        width=params[PARAM_WIDTH].astype(jnp.uint32),
+        n_mask=(params[PARAM_N_SUB] - 1).astype(jnp.uint32),
+        shift=(jnp.uint32(log2_te)
+               - params[PARAM_LOG2_N_SUB].astype(jnp.uint32)),
+        wi=wi, w_blk=w_blk, n_sub_rows=n_sub_max, signed=signed)
+    out_ref[...] += contrib[None]
+
+
+def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
+                               n_sub_max: int, padded_width: int,
+                               log2_te: int, signed: bool, blk: int,
+                               w_blk: int, interpret: bool = False):
+    """Lowered pallas_call over the (width, packet-block) grid.
+
+    ``keys``/``vals``/``ts``: flat ``(n_blocks * blk,)`` CSR stream;
+    ``block_frag``: ``(n_blocks,)`` non-decreasing int32 block->fragment
+    map covering every row of ``params`` (``repro.core.fleet.pack_csr``
+    builds both).  The packet axis is the inner sequential reduction, so
+    each fragment's counter tile is visited over a consecutive ``pj``
+    range and stays VMEM-resident while its blocks stream through.
+    """
+    n_rows = params.shape[0]
+    nb = block_frag.shape[0]
+    assert keys.shape[0] == nb * blk and padded_width % w_blk == 0
+    grid = (padded_width // w_blk, nb)
+    kernel = functools.partial(
+        fleet_ragged_kernel, w_blk=w_blk, n_sub_max=n_sub_max,
+        log2_te=log2_te, signed=signed)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, N_PARAMS), lambda i, j, bf: (bf[j], 0)),
+            pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
+            pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
+            pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_sub_max, w_blk),
+                               lambda i, j, bf: (bf[j], 0, i)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows, n_sub_max, padded_width),
+                                       jnp.float32),
+        interpret=interpret,
+    )(block_frag, params, keys, vals, ts)
+
+
+def _fleet_update_ragged(keys, vals, ts, params, block_frag, *,
+                         n_sub_max: int, width_max: int, log2_te: int,
+                         signed: bool = True, blk: int = 256,
+                         w_blk: int = 2048, interpret="auto"):
+    """Compute all subepoch-record counters for a CSR-packed fleet epoch
+    (or epoch window — rows are (epoch, fragment) pairs, see module doc).
+
+    Args:
+      keys/vals/ts: (n_blocks * blk,) flat CSR packet stream, fragment
+        segments blk-aligned and value-0 padded (``pack_csr``).
+      params: (n_rows, N_PARAMS) int32 parameter table.
+      block_frag: (n_blocks,) int32 non-decreasing block->row map; every
+        row in [0, n_rows) must own at least one block.
+
+    Returns (n_rows, n_sub_max, width_max) float32 counters (exact
+    integers while |c| < 2^24); entries outside a row's live
+    ``[:n_sub[r], :width[r]]`` block are exactly zero.
+    """
+    interpret = resolve_interpret(interpret)
+    w_blk = min(w_blk, int(2 ** np.ceil(np.log2(max(width_max, 128)))))
+    pad_w = (-width_max) % w_blk
+    out = fleet_update_ragged_pallas(
+        keys.astype(jnp.uint32), vals.astype(jnp.float32),
+        ts.astype(jnp.uint32), params.astype(jnp.int32),
+        block_frag.astype(jnp.int32), n_sub_max=n_sub_max,
+        padded_width=width_max + pad_w, log2_te=log2_te, signed=signed,
+        blk=blk, w_blk=w_blk, interpret=interpret)
+    return out[:, :, :width_max]
+
+
+# Buffer donation of the per-window packet streams was evaluated and
+# rejected: XLA can only reuse a donated buffer by aliasing it to an
+# output of matching shape/dtype, and the 1-D uint32/f32 packet streams
+# never match the 3-D f32 counter stack — donation would just emit
+# "donated buffers were not usable" warnings every window.  The streams
+# are transient Python references; they free as soon as the dispatch
+# consumes them.
+fleet_update_ragged = jax.jit(
+    _fleet_update_ragged,
+    static_argnames=("n_sub_max", "width_max", "log2_te", "signed", "blk",
+                     "w_blk", "interpret"))
 
 
 def fleet_update_loop(keys, vals, ts, params, *, n_sub_max: int,

@@ -30,6 +30,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+def resolve_interpret(interpret) -> bool:
+    """Resolve the ``interpret`` knob shared by every kernel wrapper.
+
+    ``"auto"`` compiles through Mosaic on TPU and falls back to the
+    Pallas interpreter everywhere else (CPU CI, local dev).  Booleans
+    pass through for explicit override (tests pin ``True``).
+    """
+    if interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 # Avalanche constants (must match repro.core.hashing).
 _M1 = np.uint32(0x7FEB352D)
 _M2 = np.uint32(0x846CA68B)

@@ -37,10 +37,13 @@ fragment path in core/fragment.py) agree bit-for-bit on integer inputs
 
 Fleet variant
 -------------
-``fleet.py`` extends the same kernel with a *fragment* grid axis so one
-dispatch updates every fragment of a network epoch (heterogeneous widths
-and subepoch counts ride in a per-fragment parameter table).  See
-docs/kernels.md for the packing layout and the VMEM budget derivation.
+``fleet.py`` batches the same kernel body across every fragment of a
+network epoch — the default *ragged CSR* layout streams blk-aligned
+per-fragment segments with a scalar-prefetched block->fragment map (one
+dispatch can even cover a multi-epoch window: rows of the per-fragment
+parameter table are (epoch, fragment) pairs), and the dense-rectangle
+layout survives as the oracle.  See docs/kernels.md for the packing
+layouts and the VMEM budget derivation.
 """
 from __future__ import annotations
 
@@ -50,7 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import sketch_update_pallas
+from .kernel import resolve_interpret, sketch_update_pallas
 from .ref import sketch_update_ref
 
 
@@ -68,17 +71,19 @@ def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
                   col_seed: int, sign_seed: int, sub_seed: int,
                   signed: bool = True, backend: str = "pallas",
                   blk: int = 1024, w_blk: int = 2048,
-                  interpret: bool = True):
+                  interpret="auto"):
     """Compute all subepoch-record counters for one fragment epoch.
 
     Returns (n_sub, width) float32 counters (exact integers < 2^24).
     Padding keys with value 0 contributes nothing (one-hot x 0 = 0).
+    ``interpret="auto"`` (default) compiles on TPU and interprets on CPU.
     """
     if backend == "ref":
         return sketch_update_ref(
             keys, vals, ts, width=width, n_sub=n_sub, log2_te=log2_te,
             col_seed=col_seed, sign_seed=sign_seed, sub_seed=sub_seed,
             signed=signed)
+    interpret = resolve_interpret(interpret)
     keys = _pad_to(keys.astype(jnp.uint32), blk)
     vals = _pad_to(vals.astype(jnp.float32), blk)
     ts = _pad_to(ts.astype(jnp.uint32), blk)

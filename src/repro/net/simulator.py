@@ -7,6 +7,7 @@ so subepoch semantics are exact).  Drives any system exposing
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -16,16 +17,22 @@ from .traffic import Workload
 
 
 class Replayer:
-    def __init__(self, wl: Workload, n_switches: int):
+    def __init__(self, wl: Workload, n_switches: int,
+                 packet_cache: int = 8):
         self.wl = wl
         self.n_switches = n_switches
+        # Packed-epoch LRU capacity: packed streams are O(epoch packets)
+        # each, so an unbounded cache would accumulate the entire trace
+        # over a long replay.  8 epochs ≈ two 4-epoch windows.
+        self.packet_cache = packet_cache
         pkt_keys = wl.pkt_keys
         single_hop_flow = wl.path_len == 1
         epoch_of = (wl.pkt_ts >> wl.log2_te).astype(np.int64)
         # Per-switch packet index lists, pre-split by epoch.
         self._streams: List[Dict[int, SwitchStream]] = [
             {} for _ in range(wl.n_epochs)]
-        self._packets: Dict = {}  # (epoch, frag_order) -> FleetPacket
+        # (epoch, frag_order) -> FleetPacket, LRU-evicted
+        self._packets: "OrderedDict" = OrderedDict()
         for sw in range(n_switches):
             on_path = (wl.path_mat == sw).any(axis=1)  # per flow
             pkt_sel = on_path[wl.pkt_flow]
@@ -48,10 +55,20 @@ class Replayer:
                     single_hop=single_hop_flow[wl.pkt_flow[sl]],
                 )
 
-    def run(self, system) -> None:
+    def run(self, system, window: int = 1) -> None:
         # Fleet-backed systems consume the cached packed packet tensor
         # (built once per epoch, shared across systems and replays).
+        # ``window=E`` batches E consecutive epochs into one fleet
+        # super-dispatch (``system.run_window``; ns frozen per window).
         fleet = getattr(system, "fleet", None)
+        if window > 1 and fleet is not None:
+            for e0 in range(0, self.wl.n_epochs, window):
+                eps = range(e0, min(e0 + window, self.wl.n_epochs))
+                system.run_window(
+                    e0, [self._streams[e] for e in eps],
+                    packets=[self.epoch_packet(e, fleet.frag_order)
+                             for e in eps])
+            return
         for ep in range(self.wl.n_epochs):
             if fleet is not None:
                 system.run_epoch(ep, self._streams[ep],
@@ -68,8 +85,9 @@ class Replayer:
 
         Concatenates the epoch's per-switch streams (keys/values/ts) with
         segment offsets, in ``frag_order`` (default: all switches in id
-        order).  Built once and cached — the fleet kernel and benchmarks
-        consume this directly.
+        order).  Cached in an LRU of ``packet_cache`` epochs — recently
+        packed epochs are shared across systems/replays, but a long
+        replay never accumulates every epoch's packed stream.
         """
         from ..core.fleet import pack_streams
 
@@ -77,10 +95,15 @@ class Replayer:
             frag_order = tuple(range(self.n_switches))
         frag_order = tuple(frag_order)
         key = (epoch, frag_order)
-        if key not in self._packets:
-            self._packets[key] = pack_streams(self._streams[epoch],
-                                              frag_order)
-        return self._packets[key]
+        pkt = self._packets.get(key)
+        if pkt is None:
+            pkt = pack_streams(self._streams[epoch], frag_order)
+            self._packets[key] = pkt
+            while len(self._packets) > self.packet_cache:
+                self._packets.popitem(last=False)
+        else:
+            self._packets.move_to_end(key)
+        return pkt
 
 
 def rmse(est: np.ndarray, truth: np.ndarray) -> float:

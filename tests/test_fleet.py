@@ -1,13 +1,16 @@
 """Fleet engine tests: the batched (one-dispatch-per-epoch) path must be
 bit-identical to the per-switch loop — kernel level, system level, PEB
-control loop, and the batched query-side op."""
+control loop, and the batched query-side op.  The ragged CSR layout (the
+default) must additionally be bit-identical to the PR-1 dense rectangle
+on heterogeneous widths/n_sub and ragged segment lengths."""
 import numpy as np
 import pytest
 import jax.numpy as jnp
 
 from repro.core import equalize, query as Q
-from repro.core.disketch import DiSketchSystem, DiscoSystem
-from repro.core.fleet import FleetEpochRunner, build_params, pack_streams
+from repro.core.disketch import DiSketchSystem, DiscoSystem, SwitchStream
+from repro.core.fleet import (FleetEpochRunner, FleetPacket, build_params,
+                              pack_csr, pack_streams)
 from repro.core.fragment import FragmentConfig, process_epoch
 from repro.kernels.sketch_update import fleet as FK
 from repro.net.simulator import Replayer
@@ -203,6 +206,161 @@ def test_pack_streams_roundtrip():
         assert not vals2d[i, int(lens[i]):].any()  # zero-value padding
 
 
+def _ragged_packet(lens, seed=0, max_key=900):
+    """A FleetPacket with the given heterogeneous segment lengths."""
+    rng = np.random.RandomState(seed)
+    p = int(sum(lens))
+    offsets = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    return FleetPacket(
+        keys=rng.randint(0, max_key, p).astype(np.uint32),
+        values=np.ones(p, np.int64),
+        ts=rng.randint(0, 1 << LOG2_TE, p).astype(np.int64),
+        offsets=offsets, frag_order=tuple(range(len(lens))))
+
+
+@pytest.mark.parametrize("signed", [True, False])
+def test_ragged_kernel_matches_dense_and_loop(signed):
+    """CSR layout == dense rectangle == per-fragment oracle, bit for bit,
+    on heterogeneous widths/n_sub and ragged segments (including a
+    zero-length one and a hot fragment spanning many blocks)."""
+    _, _, _, params, widths, nsubs = _fleet_inputs(5, 700)
+    pkt = _ragged_packet([700, 3, 0, 130, 257], seed=4)
+    blk = 64
+    kw = dict(n_sub_max=16, width_max=1000, log2_te=LOG2_TE, signed=signed)
+    fkeys, fvals, fts, block_frag = pack_csr([pkt], blk)
+    out_ragged = np.asarray(FK.fleet_update_ragged(
+        jnp.asarray(fkeys), jnp.asarray(fvals), jnp.asarray(fts),
+        jnp.asarray(params), jnp.asarray(block_frag), blk=blk, w_blk=512,
+        interpret=True, **kw))
+    dkeys, dvals, dts = pkt.densify(blk)
+    out_dense = np.asarray(FK.fleet_update(
+        jnp.asarray(dkeys), jnp.asarray(dvals), jnp.asarray(dts),
+        jnp.asarray(params), blk=blk, w_blk=512, interpret=True, **kw))
+    out_loop = FK.fleet_update_loop(dkeys, dvals, dts, params,
+                                    backend="ref", **kw)
+    np.testing.assert_array_equal(out_ragged, out_dense)
+    np.testing.assert_array_equal(out_ragged, out_loop)
+    # stacked layout contract survives the ragged path
+    for f in range(5):
+        assert not out_ragged[f, nsubs[f]:, :].any()
+        assert not out_ragged[f, :, widths[f]:].any()
+
+
+def test_pack_csr_layout():
+    """CSR contract: blk-aligned segments, >= 1 block per row (empty rows
+    included), a non-decreasing block->row map covering every row, and
+    value-0 padding only."""
+    blk = 64
+    lens = [700, 3, 0, 130, 257]
+    pkt = _ragged_packet(lens, seed=5)
+    keys, vals, ts, block_frag = pack_csr([pkt], blk)
+    assert keys.shape == vals.shape == ts.shape
+    assert keys.size == block_frag.size * blk
+    assert (np.diff(block_frag) >= 0).all()
+    counts = np.bincount(block_frag, minlength=len(lens))
+    assert (counts >= 1).all()                       # empty row owns a block
+    nblk = np.maximum(1, -(-np.asarray(lens) // blk))
+    # per-row waste <= blk (modulo the trailing shape bucket on the last row)
+    np.testing.assert_array_equal(counts[:-1], nblk[:-1])
+    # every live packet lands in its row's span, padding carries value 0
+    row_off = np.concatenate([[0], np.cumsum(counts)]) * blk
+    for f, n in enumerate(lens):
+        seg = vals[row_off[f]:row_off[f + 1]]
+        assert seg[:n].sum() == n and not seg[n:].any()
+    # window packing: rows are epoch-major (e * n_frags + f)
+    _, _, _, bf2 = pack_csr([pkt, pkt], blk)
+    assert bf2.max() == 2 * len(lens) - 1
+    np.testing.assert_array_equal(
+        np.bincount(bf2, minlength=2 * len(lens))[len(lens):-1],
+        nblk[:-1])
+
+
+def test_fleet_all_empty_epoch():
+    """An epoch with no packets anywhere still produces (zero) records,
+    PEBs, and a control step identical to the loop backend."""
+    mems = {0: 512, 1: 1024, 2: 2048}
+    loop = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=LOG2_TE)
+    fleet = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=LOG2_TE,
+                           backend="fleet", fleet_kwargs=FLEET_KW)
+    loop.run_epoch(0, {})
+    fleet.run_epoch(0, {})
+    assert loop.ns == fleet.ns
+    for sw in mems:
+        np.testing.assert_array_equal(loop.records[0][sw].counters,
+                                      fleet.records[0][sw].counters)
+        assert not fleet.records[0][sw].counters.any()
+        assert fleet.peb_log[0][sw] == loop.peb_log[0][sw] == 0.0
+
+
+def test_fleet_zero_length_segment():
+    """A switch with no packets this epoch (zero-length CSR segment)
+    matches the loop backend exactly alongside busy neighbours."""
+    rng = np.random.RandomState(9)
+    mems = {0: 512, 1: 1024, 2: 768}
+    st = SwitchStream(rng.randint(0, 500, 300).astype(np.uint32),
+                      np.ones(300, np.int64),
+                      rng.randint(0, 1 << LOG2_TE, 300).astype(np.int64))
+    streams = {0: st, 2: SwitchStream(st.keys[:7], st.values[:7],
+                                      st.ts[:7])}  # switch 1 idle
+    loop = DiSketchSystem(mems, "cs", rho_target=4.0, log2_te=LOG2_TE)
+    fleet = DiSketchSystem(mems, "cs", rho_target=4.0, log2_te=LOG2_TE,
+                           backend="fleet", fleet_kwargs=FLEET_KW)
+    loop.run_epoch(0, streams)
+    fleet.run_epoch(0, streams)
+    for sw in mems:
+        np.testing.assert_array_equal(loop.records[0][sw].counters,
+                                      fleet.records[0][sw].counters)
+    assert not fleet.records[0][1].counters.any()
+
+
+def test_fleet_prepacked_equals_streams():
+    """run_epoch(packet=prepacked) is identical to run_epoch(streams)."""
+    wl, rep, mems = _small_workload(n_epochs=2)
+    a = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=wl.log2_te,
+                       backend="fleet", fleet_kwargs=FLEET_KW)
+    b = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=wl.log2_te,
+                       backend="fleet", fleet_kwargs=FLEET_KW)
+    a.run_epoch(0, rep.epoch_stream(0))
+    b.run_epoch(0, {}, packet=rep.epoch_packet(0, b.fleet.frag_order))
+    assert a.ns == b.ns
+    for sw in mems:
+        np.testing.assert_array_equal(a.records[0][sw].counters,
+                                      b.records[0][sw].counters)
+
+
+def test_dense_layout_identical_to_ragged():
+    """layout='dense' (the PR-1 rectangle, kept as oracle) and the
+    default ragged CSR layout drive the same system trajectory."""
+    wl, rep, mems = _small_workload(n_epochs=3)
+    ragged = DiSketchSystem(mems, "cs", rho_target=4.0, log2_te=wl.log2_te,
+                            backend="fleet", fleet_kwargs=FLEET_KW)
+    dense = DiSketchSystem(mems, "cs", rho_target=4.0, log2_te=wl.log2_te,
+                           backend="fleet",
+                           fleet_kwargs=dict(layout="dense", **FLEET_KW))
+    rep.run(ragged)
+    rep.run(dense)
+    assert ragged.n_log == dense.n_log
+    for e in range(wl.n_epochs):
+        for sw in mems:
+            np.testing.assert_array_equal(ragged.records[e][sw].counters,
+                                          dense.records[e][sw].counters)
+
+
+def test_replayer_packet_cache_lru():
+    """The packed-epoch cache is a bounded LRU: recent epochs are reused,
+    old ones are evicted, long replays don't accumulate every epoch."""
+    wl, _, mems = _small_workload(n_epochs=4)
+    rep = Replayer(wl, 5, packet_cache=2)
+    p0 = rep.epoch_packet(0)
+    assert rep.epoch_packet(0) is p0          # hit
+    rep.epoch_packet(1)
+    assert rep.epoch_packet(0) is p0          # still resident, now MRU
+    rep.epoch_packet(2)                       # evicts epoch 1
+    rep.epoch_packet(3)                       # evicts epoch 0
+    assert len(rep._packets) == 2
+    assert rep.epoch_packet(0) is not p0      # rebuilt after eviction
+
+
 def test_fleet_rejects_unsupported_configs():
     frags = {0: FragmentConfig(frag_id=0, kind="um", memory_bytes=1024)}
     with pytest.raises(ValueError, match="cs or cms"):
@@ -218,3 +376,6 @@ def test_fleet_rejects_unsupported_configs():
     with pytest.raises(ValueError, match="backend"):
         DiSketchSystem({0: 1024}, "cs", rho_target=1.0, log2_te=LOG2_TE,
                        backend="warp")
+    frags = {0: FragmentConfig(frag_id=0, kind="cs", memory_bytes=1024)}
+    with pytest.raises(ValueError, match="layout"):
+        FleetEpochRunner(frags, log2_te=LOG2_TE, layout="brick")
