@@ -72,6 +72,22 @@ class FleetPacket:
     def seg_lengths(self) -> np.ndarray:
         return np.diff(self.offsets)
 
+    def select(self, idx: np.ndarray) -> "FleetPacket":
+        """Sub-packet with only the fragments at positions ``idx`` (in
+        ``frag_order`` position space) — the n_sub-grouped dispatch
+        slices each group's segments out of the epoch packet."""
+        segs = [(int(self.offsets[i]), int(self.offsets[i + 1]))
+                for i in idx]
+
+        def cat(arr):
+            return np.concatenate([arr[lo:hi] for lo, hi in segs])
+
+        offs = np.concatenate([[0], np.cumsum([hi - lo
+                                               for lo, hi in segs])])
+        return FleetPacket(cat(self.keys), cat(self.values), cat(self.ts),
+                           offs.astype(np.int64),
+                           tuple(self.frag_order[i] for i in idx))
+
     def densify(self, blk: int = 256) -> Tuple[np.ndarray, np.ndarray,
                                                np.ndarray]:
         """(n_frags, p_max) rectangles, value-0 padded, p_max % blk == 0.
@@ -197,6 +213,84 @@ def build_params(fragments: Dict[int, FragmentConfig], epoch: int,
     return params
 
 
+def dispatch_ragged_grouped(params: np.ndarray,
+                            packets: Sequence[FleetPacket], *,
+                            n_sub_max: int, width_max: int, log2_te: int,
+                            signed: bool, blk: int = 256, w_blk=None,
+                            interpret="auto", value_mode: str = "auto"):
+    """Ragged CSR dispatch with fragments *grouped by subepoch count*.
+
+    The kernel's lhs row count is ``n_sub_max * w_blk/LANE`` for every
+    fragment in a launch, so one fragment running at ``n_sub = 16``
+    makes every other fragment pay 16 subepoch rows of MXU work.
+    Equalization (§4.2) deliberately spreads ``n`` across the fleet, so
+    that padding is the common case, not the corner.  Grouping rows by
+    their exact ``n_sub`` (and the group's own width ceiling) removes
+    ALL row padding at the cost of <= log2(N_MAX) launches per dispatch
+    instead of one — still O(1) in fleet size, and each launch is
+    smaller.  Counters are bit-identical to the single-launch path
+    (grouping only changes *which* zero rows are materialized).
+
+    ``params`` rows are (epoch, fragment) pairs, epoch-major, with the
+    per-fragment ``n_sub``/``width`` columns identical across epochs
+    (``ns`` frozen — the ``run_window`` contract).  Returns the stacked
+    ``(n_rows, n_sub_max, width_max)`` f32 counters — device-resident on
+    TPU (the window path computes PEBs/peaks on-device); assembled in
+    host memory on CPU, where "device" scatters would just be extra
+    copies of what is host memory anyway.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.sketch_update import fleet as FK
+
+    e_count = len(packets)
+    n_frags = packets[0].n_frags
+    n_rows = params.shape[0]
+    assert n_rows == e_count * n_frags
+    nsub_f = params[:n_frags, FK.PARAM_N_SUB].astype(np.int64)
+    width_f = params[:n_frags, FK.PARAM_WIDTH].astype(np.int64)
+    assert (params[:, FK.PARAM_N_SUB].reshape(e_count, n_frags)
+            == nsub_f).all(), "grouped dispatch requires ns frozen"
+    # widths must be frozen too: each group's launch sizes its output to
+    # the epoch-0 group width, so a later-epoch growth would silently
+    # drop columns >= w_g instead of erroring.
+    assert (params[:, FK.PARAM_WIDTH].reshape(e_count, n_frags)
+            == width_f).all(), "grouped dispatch requires widths frozen"
+
+    kw = dict(log2_te=log2_te, signed=signed, blk=blk, w_blk=w_blk,
+              interpret=interpret, value_mode=value_mode)
+    groups = [np.flatnonzero(nsub_f == n) for n in np.unique(nsub_f)]
+    on_device = jax.default_backend() == "tpu"
+    out = None
+    for frag_idx in groups:
+        n_g = int(nsub_f[frag_idx[0]])
+        w_g = int(width_f[frag_idx].max(initial=4))
+        rows = (np.arange(e_count)[:, None] * n_frags
+                + frag_idx[None, :]).ravel()
+        keys, vals, ts, block_frag = pack_csr(
+            [p.select(frag_idx) for p in packets], blk)
+        out_g = FK.fleet_update_ragged(
+            keys, vals, ts, params[rows], block_frag,
+            n_sub_max=n_g, width_max=w_g, **kw)
+        if len(groups) == 1 and n_g == n_sub_max and w_g == width_max:
+            return out_g
+        if out is None:
+            out = (jnp.zeros((n_rows, n_sub_max, width_max), jnp.float32)
+                   if on_device else
+                   np.zeros((n_rows, n_sub_max, width_max), np.float32))
+        if on_device:
+            # one eager full-stack copy per group (G <= log2(N_MAX));
+            # acceptable per window today — fold into a jitted donated
+            # scatter chain if window stacks ever dominate profile.
+            out = out.at[rows, :n_g, :w_g].set(out_g)
+        else:
+            out[rows, :n_g, :w_g] = np.asarray(out_g)
+    if out is None:
+        out = np.zeros((n_rows, n_sub_max, width_max), np.float32)
+    return out
+
+
 class _WindowBuffer:
     """Device-resident stacked counters for one epoch window.
 
@@ -276,13 +370,17 @@ class FleetEpochRunner:
     counters.  ``keep_stacked=True`` additionally retains the raw
     stacked counters per epoch for ``point_query``/``window_query`` (the
     batched query-side ops).  ``interpret="auto"`` (default) compiles on
-    TPU and interprets on CPU.
+    TPU and interprets on CPU; ``value_mode="auto"`` picks the cheapest
+    exact bf16/f32 contraction path per dispatch from the packed values
+    (all modes are bit-identical — see kernels/sketch_update/kernel.py);
+    ``w_blk=None`` defers to ``kernel.select_geometry``.
     """
 
     def __init__(self, fragments: Dict[int, FragmentConfig], log2_te: int,
-                 *, blk: int = 256, w_blk: int = 2048,
+                 *, blk: int = 256, w_blk: int = None,
                  interpret="auto", keep_stacked: bool = False,
-                 layout: str = "ragged"):
+                 layout: str = "ragged", value_mode: str = "auto",
+                 group_by_n_sub: bool = True):
         if layout not in ("ragged", "dense"):
             raise ValueError(f"unknown layout {layout!r}")
         kinds = {cfg.kind for cfg in fragments.values()}
@@ -302,6 +400,8 @@ class FleetEpochRunner:
         self.interpret = interpret
         self.keep_stacked = keep_stacked
         self.layout = layout
+        self.value_mode = value_mode
+        self.group_by_n_sub = group_by_n_sub
         self.frag_order: Tuple[int, ...] = tuple(sorted(fragments))
         self.widths = np.array([fragments[sw].width
                                 for sw in self.frag_order], np.int64)
@@ -332,11 +432,11 @@ class FleetEpochRunner:
 
     @staticmethod
     def _check_output_peak(peak: float) -> None:
-        if peak >= 2 ** 24:
-            raise OverflowError(
-                f"fleet counter magnitude {peak:.3g} exceeds the f32 "
-                "exact-integer range (2^24); use backend='loop' or "
-                "shorten the epoch")
+        # Shared with the single-fragment wrapper (ops.sketch_update):
+        # one exactness contract, enforced everywhere.
+        from ..kernels.sketch_update.kernel import check_output_peak
+
+        check_output_peak(peak)
 
     def _dispatch(self, params: np.ndarray, packets: Sequence[FleetPacket],
                   n_sub_max: int, width_max: int):
@@ -346,13 +446,19 @@ class FleetEpochRunner:
 
         kw = dict(n_sub_max=n_sub_max, width_max=width_max,
                   log2_te=self.log2_te, signed=self.kind == "cs",
-                  blk=self.blk, w_blk=self.w_blk, interpret=self.interpret)
+                  blk=self.blk, w_blk=self.w_blk, interpret=self.interpret,
+                  value_mode=self.value_mode)
         if self.layout == "dense":
             if len(packets) != 1:
                 raise ValueError("dense layout is per-epoch only; "
                                  "window dispatch requires layout='ragged'")
             keys, vals, ts = packets[0].densify(self.blk)
             return FK.fleet_update(keys, vals, ts, params, **kw)
+        if self.group_by_n_sub:
+            del kw["n_sub_max"], kw["width_max"]
+            return dispatch_ragged_grouped(
+                params, packets, n_sub_max=n_sub_max, width_max=width_max,
+                **kw)
         keys, vals, ts, block_frag = pack_csr(packets, self.blk)
         return FK.fleet_update_ragged(keys, vals, ts, params, block_frag,
                                       **kw)

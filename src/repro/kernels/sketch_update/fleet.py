@@ -5,7 +5,8 @@
 hundreds of fragments and a Python loop over them serializes the epoch
 (host dispatch latency dominates, and no cross-fragment batching reaches
 the MXU).  Two batched layouts live here, both reusing the same
-``block_contrib`` one-hot-matmul body:
+``block_contrib`` one-hot-matmul body (including its bf16 count/limb
+value modes — see kernel.py).
 
 **Ragged CSR layout (``fleet_update_ragged``, the hot path).**  Every
 fragment's stream is a *segment* of one flat ``(P_total,)`` packet
@@ -31,9 +32,10 @@ super-dispatch* reuses this kernel unchanged with virtual rows
 **Dense rectangle (``fleet_update``, kept as oracle/baseline).**  The
 PR-1 layout: packets packed into a ``(n_frags, p_max)`` rectangle with
 ``grid = (n_frags, width_blocks, packet_blocks)``; every fragment pays
-``pow2(hottest segment)`` padded packets.  Bit-identical to the ragged
-path (same param table, same in-kernel hashing) and benchmarked against
-it in benchmarks/kernel_bench.py.
+``pow2(hottest segment)`` padded packets (cheaply — see the dead-block
+skip below — but still as HBM traffic and grid steps).  Bit-identical
+to the ragged path (same param table, same in-kernel hashing) and
+benchmarked against it in benchmarks/kernel_bench.py.
 
 Shared machinery:
 
@@ -48,7 +50,12 @@ Shared machinery:
   * the stacked output is ``(n_rows, n_sub_max, width_max)`` with exact
     zeros outside each fragment's live ``[:n_sub[f], :width[f]]`` block;
   * padding packets carry ``value = 0`` and contribute nothing
-    (one-hot x 0 = 0).
+    (one-hot x 0 = 0);
+  * **dead-work skips**: a width block entirely beyond the fragment's
+    true width (``wi * w_blk >= width[f]``) and an all-zero value block
+    (pure padding) both skip the one-hot build + contraction under
+    ``pl.when`` — heterogeneous fleets no longer pay the hottest
+    fragment's width in compute, only in layout.
 
 VMEM budget per grid step is unchanged from the single-fragment kernel
 (the fragment axis only selects which counter tile is resident); the
@@ -65,7 +72,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .kernel import block_contrib, resolve_interpret
+from .kernel import (LANE, block_contrib, pow2_width_cap,
+                     resolve_interpret, resolve_value_mode,
+                     select_geometry)
 
 # Columns of the per-fragment int32 parameter table.
 PARAM_COL_SEED = 0
@@ -77,9 +86,26 @@ PARAM_LOG2_N_SUB = 5
 N_PARAMS = 8  # padded to 8 for alignment
 
 
+def _frag_contrib(params, keys, vals, ts, *, wi, w_blk, n_sub_max,
+                  log2_te, signed, value_mode):
+    """One fragment's packet-block contribution, parameters from its
+    table row."""
+    return block_contrib(
+        keys.astype(jnp.uint32), vals, ts.astype(jnp.uint32),
+        col_seed=params[PARAM_COL_SEED].astype(jnp.uint32),
+        sign_seed=params[PARAM_SIGN_SEED].astype(jnp.uint32),
+        sub_seed=params[PARAM_SUB_SEED].astype(jnp.uint32),
+        width=params[PARAM_WIDTH].astype(jnp.uint32),
+        n_mask=(params[PARAM_N_SUB] - 1).astype(jnp.uint32),
+        shift=(jnp.uint32(log2_te)
+               - params[PARAM_LOG2_N_SUB].astype(jnp.uint32)),
+        wi=wi, w_blk=w_blk, n_sub_rows=n_sub_max, signed=signed,
+        value_mode=value_mode)
+
+
 def fleet_update_kernel(params_ref, keys_ref, vals_ref, ts_ref, out_ref, *,
                         w_blk: int, n_sub_max: int, log2_te: int,
-                        signed: bool):
+                        signed: bool, value_mode: str):
     wi = pl.program_id(1)   # width-block index
     pj = pl.program_id(2)   # packet-block index (sequential reduction)
 
@@ -89,24 +115,24 @@ def fleet_update_kernel(params_ref, keys_ref, vals_ref, ts_ref, out_ref, *,
 
     # This fragment's hash parameters, read in-kernel as traced scalars.
     params = params_ref[...][0]                     # (N_PARAMS,) int32
-    contrib = block_contrib(
-        keys_ref[...][0].astype(jnp.uint32),
-        vals_ref[...][0].astype(jnp.float32),
-        ts_ref[...][0].astype(jnp.uint32),
-        col_seed=params[PARAM_COL_SEED].astype(jnp.uint32),
-        sign_seed=params[PARAM_SIGN_SEED].astype(jnp.uint32),
-        sub_seed=params[PARAM_SUB_SEED].astype(jnp.uint32),
-        width=params[PARAM_WIDTH].astype(jnp.uint32),
-        n_mask=(params[PARAM_N_SUB] - 1).astype(jnp.uint32),
-        shift=(jnp.uint32(log2_te)
-               - params[PARAM_LOG2_N_SUB].astype(jnp.uint32)),
-        wi=wi, w_blk=w_blk, n_sub_rows=n_sub_max, signed=signed)
-    out_ref[...] += contrib[None]
+    vals = vals_ref[...][0].astype(jnp.float32)
+    # Dead-work skip: width blocks beyond this fragment's true width
+    # write nothing, and all-zero value blocks (packet padding — most of
+    # the dense rectangle under skew) contribute nothing.
+    live = ((wi * w_blk) < params[PARAM_WIDTH]) & jnp.any(vals != 0.0)
+
+    @pl.when(live)
+    def _accum():
+        out_ref[...] += _frag_contrib(
+            params, keys_ref[...][0], vals, ts_ref[...][0], wi=wi,
+            w_blk=w_blk, n_sub_max=n_sub_max, log2_te=log2_te,
+            signed=signed, value_mode=value_mode)[None]
 
 
 def fleet_update_pallas(keys, vals, ts, params, *, n_sub_max: int,
                         padded_width: int, log2_te: int, signed: bool,
-                        blk: int, w_blk: int, interpret: bool = False):
+                        blk: int, w_blk: int, value_mode: str,
+                        interpret: bool = False):
     """Lowered pallas_call over the (fragment, width, packet) grid.
 
     ``keys``/``vals``/``ts``: (n_frags, p_max) with p_max % blk == 0;
@@ -117,9 +143,10 @@ def fleet_update_pallas(keys, vals, ts, params, *, n_sub_max: int,
     n_frags, p = keys.shape
     assert p % blk == 0 and padded_width % w_blk == 0
     grid = (n_frags, padded_width // w_blk, p // blk)
+    j_rows = w_blk // LANE
     kernel = functools.partial(
         fleet_update_kernel, w_blk=w_blk, n_sub_max=n_sub_max,
-        log2_te=log2_te, signed=signed)
+        log2_te=log2_te, signed=signed, value_mode=value_mode)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -129,20 +156,28 @@ def fleet_update_pallas(keys, vals, ts, params, *, n_sub_max: int,
             pl.BlockSpec((1, blk), lambda f, i, j: (f, j)),
             pl.BlockSpec((1, blk), lambda f, i, j: (f, j)),
         ],
-        out_specs=pl.BlockSpec((1, n_sub_max, w_blk),
-                               lambda f, i, j: (f, 0, i)),
-        out_shape=jax.ShapeDtypeStruct((n_frags, n_sub_max, padded_width),
-                                       jnp.float32),
+        out_specs=pl.BlockSpec((1, n_sub_max, j_rows, LANE),
+                               lambda f, i, j: (f, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_frags, n_sub_max, padded_width // LANE, LANE), jnp.float32),
+        # Fragment and width axes touch disjoint counter tiles: parallel
+        # (megacore); the packet axis is the sequential accumulation.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(params, keys, vals, ts)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "n_sub_max", "width_max", "log2_te", "signed", "blk", "w_blk",
-    "interpret"))
+_fleet_update_jit = jax.jit(
+    fleet_update_pallas,
+    static_argnames=("n_sub_max", "padded_width", "log2_te", "signed",
+                     "blk", "w_blk", "value_mode", "interpret"))
+
+
 def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
-                 log2_te: int, signed: bool = True, blk: int = 1024,
-                 w_blk: int = 2048, interpret="auto"):
+                 log2_te: int, signed: bool = True, blk: int = None,
+                 w_blk: int = None, value_mode: str = "auto",
+                 interpret="auto"):
     """Compute all subepoch-record counters for a whole fleet epoch.
 
     Args:
@@ -152,32 +187,41 @@ def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
         (see ``repro.core.fleet.build_params``).
       n_sub_max: max subepoch count across the fleet (power of two).
       width_max: max hash width across the fleet.
+      value_mode: contraction path ("auto" resolves from concrete
+        values — see ``kernel.resolve_value_mode``).
 
     Returns (n_frags, n_sub_max, width_max) float32 counters (exact
     integers while |c| < 2^24); entries outside a fragment's live
     ``[:n_sub[f], :width[f]]`` block are exactly zero.
     """
     interpret = resolve_interpret(interpret)
+    value_mode = resolve_value_mode(value_mode, vals, interpret)
+    if blk is None or w_blk is None:
+        g_blk, g_w_blk = select_geometry(width_max, n_sub_max, value_mode)
+        blk = g_blk if blk is None else blk
+        w_blk = g_w_blk if w_blk is None else w_blk
     n_frags, p = keys.shape
     pad_p = (-p) % blk
     if pad_p:
-        keys = jnp.pad(keys.astype(jnp.uint32), ((0, 0), (0, pad_p)))
-        vals = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, pad_p)))
-        ts = jnp.pad(ts.astype(jnp.uint32), ((0, 0), (0, pad_p)))
-    w_blk = min(w_blk, int(2 ** np.ceil(np.log2(max(width_max, 128)))))
+        keys = jnp.pad(jnp.asarray(keys, jnp.uint32), ((0, 0), (0, pad_p)))
+        vals = jnp.pad(jnp.asarray(vals, jnp.float32), ((0, 0), (0, pad_p)))
+        ts = jnp.pad(jnp.asarray(ts, jnp.uint32), ((0, 0), (0, pad_p)))
+    w_blk = min(w_blk, pow2_width_cap(width_max))
     pad_w = (-width_max) % w_blk
-    out = fleet_update_pallas(
-        keys.astype(jnp.uint32), vals.astype(jnp.float32),
-        ts.astype(jnp.uint32), params.astype(jnp.int32),
+    out = _fleet_update_jit(
+        jnp.asarray(keys, jnp.uint32), jnp.asarray(vals, jnp.float32),
+        jnp.asarray(ts, jnp.uint32), jnp.asarray(params, jnp.int32),
         n_sub_max=n_sub_max, padded_width=width_max + pad_w,
         log2_te=log2_te, signed=signed, blk=blk, w_blk=w_blk,
-        interpret=interpret)
-    return out[:, :, :width_max]
+        value_mode=value_mode, interpret=interpret)
+    # Undo the kernel's factored (.., W/LANE, LANE) layout: free reshape.
+    return (out.reshape(out.shape[0], n_sub_max, width_max + pad_w)
+            [:, :, :width_max])
 
 
 def fleet_ragged_kernel(block_frag_ref, params_ref, keys_ref, vals_ref,
                         ts_ref, out_ref, *, w_blk: int, n_sub_max: int,
-                        log2_te: int, signed: bool):
+                        log2_te: int, signed: bool, value_mode: str):
     """Ragged CSR body: one packet block of the flat stream, applied to
     its owning fragment's counter tile (selected by the BlockSpec index
     maps from the scalar-prefetched ``block_frag`` map)."""
@@ -195,25 +239,24 @@ def fleet_ragged_kernel(block_frag_ref, params_ref, keys_ref, vals_ref,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     params = params_ref[...][0]                     # (N_PARAMS,) int32
-    contrib = block_contrib(
-        keys_ref[...].astype(jnp.uint32),
-        vals_ref[...].astype(jnp.float32),
-        ts_ref[...].astype(jnp.uint32),
-        col_seed=params[PARAM_COL_SEED].astype(jnp.uint32),
-        sign_seed=params[PARAM_SIGN_SEED].astype(jnp.uint32),
-        sub_seed=params[PARAM_SUB_SEED].astype(jnp.uint32),
-        width=params[PARAM_WIDTH].astype(jnp.uint32),
-        n_mask=(params[PARAM_N_SUB] - 1).astype(jnp.uint32),
-        shift=(jnp.uint32(log2_te)
-               - params[PARAM_LOG2_N_SUB].astype(jnp.uint32)),
-        wi=wi, w_blk=w_blk, n_sub_rows=n_sub_max, signed=signed)
-    out_ref[...] += contrib[None]
+    vals = vals_ref[...].astype(jnp.float32)
+    # Dead-work skip: width blocks beyond this fragment's true width and
+    # all-zero value blocks (blk-alignment / shape-bucket padding).
+    live = ((wi * w_blk) < params[PARAM_WIDTH]) & jnp.any(vals != 0.0)
+
+    @pl.when(live)
+    def _accum():
+        out_ref[...] += _frag_contrib(
+            params, keys_ref[...], vals, ts_ref[...], wi=wi, w_blk=w_blk,
+            n_sub_max=n_sub_max, log2_te=log2_te, signed=signed,
+            value_mode=value_mode)[None]
 
 
 def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
                                n_sub_max: int, padded_width: int,
                                log2_te: int, signed: bool, blk: int,
-                               w_blk: int, interpret: bool = False):
+                               w_blk: int, value_mode: str,
+                               interpret: bool = False):
     """Lowered pallas_call over the (width, packet-block) grid.
 
     ``keys``/``vals``/``ts``: flat ``(n_blocks * blk,)`` CSR stream;
@@ -227,9 +270,10 @@ def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
     nb = block_frag.shape[0]
     assert keys.shape[0] == nb * blk and padded_width % w_blk == 0
     grid = (padded_width // w_blk, nb)
+    j_rows = w_blk // LANE
     kernel = functools.partial(
         fleet_ragged_kernel, w_blk=w_blk, n_sub_max=n_sub_max,
-        log2_te=log2_te, signed=signed)
+        log2_te=log2_te, signed=signed, value_mode=value_mode)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
@@ -239,46 +283,20 @@ def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
             pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
             pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
         ],
-        out_specs=pl.BlockSpec((1, n_sub_max, w_blk),
-                               lambda i, j, bf: (bf[j], 0, i)),
+        out_specs=pl.BlockSpec((1, n_sub_max, j_rows, LANE),
+                               lambda i, j, bf: (bf[j], 0, i, 0)),
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_rows, n_sub_max, padded_width),
-                                       jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_rows, n_sub_max, padded_width // LANE, LANE), jnp.float32),
+        # Width blocks touch disjoint counter tiles: parallel (megacore);
+        # the packet axis accumulates per fragment: sequential.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(block_frag, params, keys, vals, ts)
-
-
-def _fleet_update_ragged(keys, vals, ts, params, block_frag, *,
-                         n_sub_max: int, width_max: int, log2_te: int,
-                         signed: bool = True, blk: int = 256,
-                         w_blk: int = 2048, interpret="auto"):
-    """Compute all subepoch-record counters for a CSR-packed fleet epoch
-    (or epoch window — rows are (epoch, fragment) pairs, see module doc).
-
-    Args:
-      keys/vals/ts: (n_blocks * blk,) flat CSR packet stream, fragment
-        segments blk-aligned and value-0 padded (``pack_csr``).
-      params: (n_rows, N_PARAMS) int32 parameter table.
-      block_frag: (n_blocks,) int32 non-decreasing block->row map; every
-        row in [0, n_rows) must own at least one block.
-
-    Returns (n_rows, n_sub_max, width_max) float32 counters (exact
-    integers while |c| < 2^24); entries outside a row's live
-    ``[:n_sub[r], :width[r]]`` block are exactly zero.
-    """
-    interpret = resolve_interpret(interpret)
-    w_blk = min(w_blk, int(2 ** np.ceil(np.log2(max(width_max, 128)))))
-    pad_w = (-width_max) % w_blk
-    out = fleet_update_ragged_pallas(
-        keys.astype(jnp.uint32), vals.astype(jnp.float32),
-        ts.astype(jnp.uint32), params.astype(jnp.int32),
-        block_frag.astype(jnp.int32), n_sub_max=n_sub_max,
-        padded_width=width_max + pad_w, log2_te=log2_te, signed=signed,
-        blk=blk, w_blk=w_blk, interpret=interpret)
-    return out[:, :, :width_max]
 
 
 # Buffer donation of the per-window packet streams was evaluated and
@@ -288,10 +306,51 @@ def _fleet_update_ragged(keys, vals, ts, params, block_frag, *,
 # "donated buffers were not usable" warnings every window.  The streams
 # are transient Python references; they free as soon as the dispatch
 # consumes them.
-fleet_update_ragged = jax.jit(
-    _fleet_update_ragged,
-    static_argnames=("n_sub_max", "width_max", "log2_te", "signed", "blk",
-                     "w_blk", "interpret"))
+_fleet_update_ragged_jit = jax.jit(
+    fleet_update_ragged_pallas,
+    static_argnames=("n_sub_max", "padded_width", "log2_te", "signed",
+                     "blk", "w_blk", "value_mode", "interpret"))
+
+
+def fleet_update_ragged(keys, vals, ts, params, block_frag, *,
+                        n_sub_max: int, width_max: int, log2_te: int,
+                        signed: bool = True, blk: int = 256,
+                        w_blk: int = None, value_mode: str = "auto",
+                        interpret="auto"):
+    """Compute all subepoch-record counters for a CSR-packed fleet epoch
+    (or epoch window — rows are (epoch, fragment) pairs, see module doc).
+
+    Args:
+      keys/vals/ts: (n_blocks * blk,) flat CSR packet stream, fragment
+        segments blk-aligned and value-0 padded (``pack_csr``).
+      params: (n_rows, N_PARAMS) int32 parameter table.
+      block_frag: (n_blocks,) int32 non-decreasing block->row map; every
+        row in [0, n_rows) must own at least one block.
+      blk: must match the packer's block size (the CSR alignment knob —
+        kept small so per-fragment padding stays <= blk, unlike the
+        compute-geometry ``blk`` of the dense paths).
+      value_mode: contraction path ("auto" resolves from concrete
+        values — see ``kernel.resolve_value_mode``).
+
+    Returns (n_rows, n_sub_max, width_max) float32 counters (exact
+    integers while |c| < 2^24); entries outside a row's live
+    ``[:n_sub[r], :width[r]]`` block are exactly zero.
+    """
+    interpret = resolve_interpret(interpret)
+    value_mode = resolve_value_mode(value_mode, vals, interpret)
+    if w_blk is None:
+        _, w_blk = select_geometry(width_max, n_sub_max, value_mode)
+    w_blk = min(w_blk, pow2_width_cap(width_max))
+    pad_w = (-width_max) % w_blk
+    out = _fleet_update_ragged_jit(
+        jnp.asarray(keys, jnp.uint32), jnp.asarray(vals, jnp.float32),
+        jnp.asarray(ts, jnp.uint32), jnp.asarray(params, jnp.int32),
+        jnp.asarray(block_frag, jnp.int32), n_sub_max=n_sub_max,
+        padded_width=width_max + pad_w, log2_te=log2_te, signed=signed,
+        blk=blk, w_blk=w_blk, value_mode=value_mode, interpret=interpret)
+    # Undo the kernel's factored (.., W/LANE, LANE) layout: free reshape.
+    return (out.reshape(out.shape[0], n_sub_max, width_max + pad_w)
+            [:, :, :width_max])
 
 
 def fleet_update_loop(keys, vals, ts, params, *, n_sub_max: int,

@@ -12,14 +12,51 @@ hashing (column, sign, subepoch of both packet and flow) happens in-kernel
 in uint32 arithmetic (VPU), so the only HBM traffic is the packet stream in
 and the counters out.
 
+Value modes (the bf16 limb-split engine)
+----------------------------------------
+One-hots are 0/1 — exact in any float dtype — so the contraction dtype is
+a free knob.  bf16 halves the dominant VMEM buffer (the (BLK, W_BLK)
+column one-hot) and runs the MXU at its native bf16 rate (an f32 HIGHEST
+matmul costs ~6 bf16 passes); the MXU accumulates bf16 x bf16 products in
+f32, so exactness only needs each *operand* to be exact in bf16's 8-bit
+mantissa.  Three statically-selected paths:
+
+  * ``"count"`` — |val'| <= 256 (pure packet counting, the dominant
+    workload): val' itself is exact in bf16, one bf16 contraction.
+  * ``"limb"``  — |val'| < 2^16: split ``val' = hi*256 + lo`` with
+    ``hi = trunc(val'/256)``, ``lo = val' - 256*hi``; both limbs are
+    integers in [-256, 256], exact in bf16, and two bf16 contractions
+    recombine as ``acc_hi*256 + acc_lo`` (the scale is a power of two,
+    exact in f32).
+  * ``"f32"``   — the original HIGHEST-precision f32 contraction; the
+    fallback for per-packet |values| >= 2^16 or non-integer values.
+
+All three are bit-identical to the jnp scatter oracle while counters obey
+the repo-wide exactness contract (|counter| < 2^24, enforced by
+``check_output_peak``); ``resolve_value_mode`` picks the cheapest sound
+path from concrete input values at trace time.
+
 Grid: (width_blocks, packet_blocks); the packet axis is the inner
 (sequential) reduction axis, so each counter tile is initialized once and
-revisited across packet blocks.
+revisited across packet blocks.  The width axis is declared ``parallel``
+(``dimension_semantics``) so Mosaic may split it across megacore
+TensorCores.  All-zero packet blocks (padding) skip the contraction
+entirely (``pl.when`` on a VPU reduction of the value block).
 
-VMEM budget per step: keys/vals/ts blocks (3 * BLK * 4B) + one-hot
-(BLK * W_BLK * 4B) + counters tile (N_SUB * W_BLK * 4B).  Defaults
-(BLK=1024, W_BLK=2048, n_sub<=16) ~ 8.5 MB + 0.13 MB < 16 MB VMEM.
-Matmul dims are multiples of (8,128): BLK and W_BLK both 128-aligned.
+The column one-hot itself is *factored* into quotient/residue limbs
+(``col = q * LANE + r``, LANE = 128) with the quotient fused into the
+subepoch row id, so the contraction is ``(N_SUB*J, BLK) @ (BLK, LANE)``
+(J = W_BLK/LANE) and the old dominant ``(BLK, W_BLK)`` one-hot buffer
+never exists — see ``block_contrib`` and docs/kernels.md §1.
+
+VMEM budget per step (``vmem_bytes`` is the single source of truth):
+keys/vals/ts blocks (3 * BLK * 4B) + combined-row lhs
+(N_SUB * W_BLK/LANE * BLK * ebytes; twice for the limb mode) + residue
+one-hot rhs (BLK * LANE * ebytes) + counters tile (N_SUB * W_BLK * 4B),
+with ebytes = 2 for the bf16 paths.  ``select_geometry`` picks the
+largest (BLK, W_BLK) under ``VMEM_BUDGET_BYTES`` — the headline
+(2048, 4096) geometry fits every mode at n_sub <= 16.  Matmul dims are
+multiples of (8,128): BLK and W_BLK both 128-aligned.
 """
 from __future__ import annotations
 
@@ -29,6 +66,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# ---------------------------------------------------------------------------
+# Numerical contract constants.
+
+#: f32 accumulates integers exactly while |counter| stays below this.
+EXACT_BOUND = 1 << 24
+#: |value| bound for the single-contraction bf16 "count" path (integers
+#: up to 2^8 are exact in bf16's 8-bit mantissa).
+COUNT_BOUND = 1 << 8
+#: |value| bound for the two-limb bf16 "limb" path (hi*256 + lo, each
+#: limb exact in bf16).
+LIMB_BOUND = 1 << 16
+
+VALUE_MODES = ("count", "limb", "f32")
+
+#: Residue width of the factored column one-hot — the TPU lane width.
+LANE = 128
+LANE_BITS = 7
+
+#: Default VMEM budget for geometry selection: leave ~4 MiB of the
+#: 16 MiB/core for Mosaic's own double-buffering and spills.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+
+def pow2_width_cap(width: int) -> int:
+    """Power-of-two ceiling of a hash width, floored at one LANE tile —
+    the cap every wrapper applies to ``w_blk`` so narrow fragments never
+    allocate wider blocks than their padded width."""
+    return int(2 ** np.ceil(np.log2(max(width, LANE))))
+
 
 def resolve_interpret(interpret) -> bool:
     """Resolve the ``interpret`` knob shared by every kernel wrapper.
@@ -40,6 +108,110 @@ def resolve_interpret(interpret) -> bool:
     if interpret == "auto":
         return jax.default_backend() != "tpu"
     return bool(interpret)
+
+
+def resolve_value_mode(value_mode, vals, interpret: bool = False) -> str:
+    """Resolve the ``value_mode`` knob shared by every kernel wrapper.
+
+    ``"auto"`` inspects *concrete* value arrays (the common case: the
+    public wrappers are plain functions called with host numpy / device
+    arrays) and picks the cheapest exact path: ``"count"`` for integer
+    |v| <= 256, ``"limb"`` for integer |v| < 2^16, ``"f32"`` otherwise.
+    Under an outer trace (values are abstract) it conservatively falls
+    back to ``"f32"`` — callers inside jit should pass an explicit mode.
+
+    ``interpret=True`` (the CPU fallback) also resolves to ``"f32"``:
+    off-TPU there is no MXU rate or VMEM budget to win back and XLA CPU
+    emulates bf16 matmuls slowly.  Explicit modes are always honored
+    (that is how the CPU test suite pins the bf16 paths).
+    """
+    if value_mode != "auto":
+        if value_mode not in VALUE_MODES:
+            raise ValueError(f"unknown value_mode {value_mode!r}; "
+                             f"expected one of {VALUE_MODES} or 'auto'")
+        return value_mode
+    if interpret or isinstance(vals, jax.core.Tracer):
+        return "f32"
+    if (isinstance(vals, jax.Array)
+            and next(iter(vals.devices())).platform != "cpu"):
+        # Don't drag an accelerator-resident stream to host just to
+        # inspect it — callers holding device arrays pass an explicit
+        # mode to opt into the bf16 paths.
+        return "f32"
+    v = np.asarray(vals)
+    if v.size == 0:
+        return "count"
+    if not np.all(v == np.trunc(v)):
+        return "f32"
+    m = float(np.max(np.abs(v)))
+    if m <= COUNT_BOUND:
+        return "count"
+    if m < LIMB_BOUND:
+        return "limb"
+    return "f32"
+
+
+def check_output_peak(peak: float) -> None:
+    """Enforce the f32 exact-integer contract on a counter peak.
+
+    Shared by the fleet runner and the single-fragment wrapper: every
+    path that hands counters to the query plane must refuse to return
+    silently-inexact values.
+    """
+    if peak >= EXACT_BOUND:
+        raise OverflowError(
+            f"counter magnitude {peak:.3g} exceeds the f32 exact-integer "
+            "range (2^24); shorten the epoch or split the stream")
+
+
+def _elem_bytes(value_mode: str) -> int:
+    return 2 if value_mode in ("count", "limb") else 4
+
+
+def vmem_bytes(blk: int, w_blk: int, n_sub: int,
+               value_mode: str = "f32") -> int:
+    """Working set per grid step for one (BLK, W_BLK) geometry.
+
+    The factored contraction (see ``block_contrib``) keeps two operand
+    buffers per dot — the combined-row lhs ``(n_sub * W_BLK/LANE, BLK)``
+    and the residue one-hot ``(BLK, LANE)`` — instead of the old
+    ``(BLK, W_BLK)`` column one-hot, cutting the dominant buffer by
+    ``LANE / n_sub``x.  The bf16 paths halve both operands; the limb
+    path materializes two lhs buffers (hi/lo limbs).  The single source
+    of truth for the budget — ``benchmarks.kernel_bench`` and
+    docs/kernels.md both defer to it.
+    """
+    eb = _elem_bytes(value_mode)
+    rows = n_sub * max(w_blk // LANE, 1)
+    keys_vals_ts = 3 * blk * 4
+    lhs = rows * blk * eb * (2 if value_mode == "limb" else 1)
+    rhs = blk * LANE * eb
+    counters = n_sub * w_blk * 4
+    return keys_vals_ts + lhs + rhs + counters
+
+
+def select_geometry(width: int, n_sub: int, value_mode: str = "count",
+                    budget: int = VMEM_BUDGET_BYTES):
+    """Largest (blk, w_blk) block geometry that fits the VMEM budget.
+
+    Preference order: maximize ``w_blk`` first (each width block re-reads
+    the whole packet stream from HBM, so fewer width blocks is the
+    bigger lever), then ``blk`` (amortizes per-grid-step overhead and
+    deepens the MXU contraction).  ``w_blk`` is capped at the padded
+    width so narrow fragments spend the budget on ``blk`` instead.
+    With the factored contraction the headline (2048, 4096) geometry
+    fits every value mode at n_sub <= 16 (~5.3 MiB f32, ~2.7 MiB bf16);
+    extreme subepoch counts shrink it automatically (the lhs row count
+    scales with ``n_sub * w_blk``).
+    """
+    w_cap = pow2_width_cap(width)
+    for w_blk in (4096, 2048, 1024, 512, 256, 128):
+        if w_blk > w_cap:
+            continue
+        for blk in (2048, 1024, 512, 256):
+            if vmem_bytes(blk, w_blk, n_sub, value_mode) <= budget:
+                return blk, w_blk
+    return 256, 128
 
 
 # Avalanche constants (must match repro.core.hashing).
@@ -73,15 +245,36 @@ def _hash_mod(keys, seed, mod):
 
 
 def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
-                  width, n_mask, shift, wi, w_blk, n_sub_rows, signed):
+                  width, n_mask, shift, wi, w_blk, n_sub_rows, signed,
+                  value_mode: str = "f32"):
     """Shared per-packet-block body: hashes -> §4.1 monitored mask ->
-    one-hots -> one MXU dot.  The single source of truth for the sketch
-    update arithmetic; the single-fragment and fleet kernels both call
-    it.  Hash scalars may be static Python ints (single-fragment) or
-    traced uint32 scalars (per-fragment table, fleet); ``n_sub_rows``
-    (the output row count) is always static.
+    factored one-hots -> one or two MXU dots (see the module doc's value
+    modes).  The single source of truth for the sketch update arithmetic;
+    the single-fragment and fleet kernels both call it.  Hash scalars may
+    be static Python ints (single-fragment) or traced uint32 scalars
+    (per-fragment table, fleet); ``n_sub_rows`` (the output row count)
+    and ``value_mode`` are always static.
+
+    The column one-hot is *factored* into quotient/residue limbs,
+    ``local_col = q * LANE + r``: the quotient is fused with the
+    subepoch id into one combined row id ``cid = sub * J + q``
+    (J = W_BLK / LANE), so the contraction is
+
+        (N_SUB*J, BLK) @ (BLK, LANE)    # lhs = (cid one-hot) * val'
+
+    instead of ``(N_SUB, BLK) @ (BLK, W_BLK)``.  Identical flop count,
+    but the (BLK, W_BLK) one-hot — formerly the dominant VMEM buffer
+    *and* half the wall-time — never exists, and the matmul is
+    dense-shaped for the 128x128 MXU (>= 128 rows whenever
+    n_sub * w_blk >= 16K, vs. n_sub <= 16 rows before).  Returns
+    ``(n_sub_rows, J, LANE)`` — a leading-dim split of the matmul
+    result, laid out so row (s, j) holds columns [j*LANE, (j+1)*LANE) of
+    subepoch s; the callers' output tiles use the same layout and the
+    public wrappers reshape to (n_sub, width) for free outside the
+    kernel.
     """
     blk = keys.shape[0]
+    j_rows = w_blk // LANE
     # Subepoch of the packet: Method 2 bit-slice of the timestamp.
     sub_pkt = ((ts >> shift) & n_mask).astype(jnp.int32)
     # Subepoch the flow is monitored in (temporal sampling, §4.1).
@@ -95,24 +288,60 @@ def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
         vals = vals * sgn
     vals = vals * monitored
 
-    # One-hot over this width block: (BLK, W_BLK) in f32 for the MXU.
+    # Quotient/residue factorization of this width block's columns.
+    # Packets whose column lives in another width block get cid = -1
+    # (matches no row; q alone could alias a neighbouring (sub, q) row).
     local_col = col - wi * w_blk
-    col_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, w_blk), 1)
-    onehot_col = (local_col[:, None] == col_iota).astype(jnp.float32)
-    # One-hot over subepochs: (N_SUB, BLK); ids >= the fragment's true
-    # n_sub never occur, so any extra rows stay zero.
-    sub_iota = jax.lax.broadcasted_iota(jnp.int32, (n_sub_rows, blk), 0)
-    onehot_sub = (sub_pkt[None, :] == sub_iota).astype(jnp.float32)
+    in_block = (local_col >= 0) & (local_col < w_blk)
+    q = local_col >> LANE_BITS
+    r = local_col & (LANE - 1)
+    cid = jnp.where(in_block, sub_pkt * j_rows + q, -1)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (n_sub_rows * j_rows,
+                                                    blk), 0)
+    lane_iota = jax.lax.broadcasted_iota(jnp.int32, (blk, LANE), 1)
+    row_sel = cid[None, :] == row_iota              # (N_SUB*J, BLK) 0/1
+    lane_sel = r[:, None] == lane_iota              # (BLK, LANE)   0/1
 
-    # (N_SUB, BLK) @ (BLK, W_BLK) -> (N_SUB, W_BLK) on the MXU.
-    return jax.lax.dot(onehot_sub * vals[None, :], onehot_col,
-                       precision=jax.lax.Precision.HIGHEST)
+    if value_mode == "f32":
+        # lhs build is a single fused select (measurably cheaper than
+        # cast-then-multiply): lhs[row, p] = val'[p] iff cid[p] == row.
+        lhs = jnp.where(row_sel, vals[None, :], jnp.float32(0.0))
+        out = jax.lax.dot(lhs, lane_sel.astype(jnp.float32),
+                          precision=jax.lax.Precision.HIGHEST)
+        return out.reshape(n_sub_rows, j_rows, LANE)
+
+    # bf16 paths: 0/1 one-hots are exact in bf16; the MXU accumulates
+    # bf16 x bf16 products in f32 (preferred_element_type), so every
+    # product below is exact and the f32 accumulation obeys the same
+    # 2^24 contract as the f32 path — bit-identical outputs.
+    rhs = lane_sel.astype(jnp.bfloat16)
+    zero = jnp.bfloat16(0.0)
+    if value_mode == "count":
+        # |val'| <= 256: exact in bf16, single contraction.
+        lhs = jnp.where(row_sel, vals.astype(jnp.bfloat16)[None], zero)
+        out = jax.lax.dot(lhs, rhs, preferred_element_type=jnp.float32)
+        return out.reshape(n_sub_rows, j_rows, LANE)
+    if value_mode != "limb":
+        raise ValueError(f"unknown value_mode {value_mode!r}")
+    # |val'| < 2^16: two exact 8-bit limbs, hi*256 + lo.  trunc and the
+    # power-of-two scale are exact in f32; limb signs match val's sign so
+    # |partial hi-sums|*256 never exceed the input |value| mass.
+    hi = jnp.trunc(vals * jnp.float32(1.0 / 256.0))
+    lo = vals - hi * jnp.float32(256.0)
+    acc_hi = jax.lax.dot(
+        jnp.where(row_sel, hi.astype(jnp.bfloat16)[None], zero), rhs,
+        preferred_element_type=jnp.float32)
+    acc_lo = jax.lax.dot(
+        jnp.where(row_sel, lo.astype(jnp.bfloat16)[None], zero), rhs,
+        preferred_element_type=jnp.float32)
+    out = acc_hi * jnp.float32(256.0) + acc_lo
+    return out.reshape(n_sub_rows, j_rows, LANE)
 
 
 def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
                          hash_width: int, w_blk: int, n_sub: int,
                          log2_te: int, col_seed: int, sign_seed: int,
-                         sub_seed: int, signed: bool):
+                         sub_seed: int, signed: bool, value_mode: str):
     wi = pl.program_id(0)   # width-block index
     pj = pl.program_id(1)   # packet-block index (sequential reduction)
 
@@ -120,31 +349,48 @@ def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += block_contrib(
-        keys_ref[...].astype(np.uint32), vals_ref[...].astype(jnp.float32),
-        ts_ref[...].astype(np.uint32),
-        col_seed=np.uint32(col_seed), sign_seed=np.uint32(sign_seed),
-        sub_seed=np.uint32(sub_seed), width=hash_width,
-        n_mask=np.uint32(n_sub - 1),
-        shift=np.uint32(log2_te - (n_sub.bit_length() - 1)),
-        wi=wi, w_blk=w_blk, n_sub_rows=n_sub, signed=signed)
+    vals = vals_ref[...].astype(jnp.float32)
+
+    # All-zero value blocks (tail padding) contribute nothing: skip the
+    # one-hot build + contraction on a cheap VPU reduction.
+    @pl.when(jnp.any(vals != 0.0))
+    def _accum():
+        out_ref[...] += block_contrib(
+            keys_ref[...].astype(np.uint32), vals,
+            ts_ref[...].astype(np.uint32),
+            col_seed=np.uint32(col_seed), sign_seed=np.uint32(sign_seed),
+            sub_seed=np.uint32(sub_seed), width=hash_width,
+            n_mask=np.uint32(n_sub - 1),
+            shift=np.uint32(log2_te - (n_sub.bit_length() - 1)),
+            wi=wi, w_blk=w_blk, n_sub_rows=n_sub, signed=signed,
+            value_mode=value_mode)
 
 
 def sketch_update_pallas(keys, vals, ts, *, hash_width: int,
                          padded_width: int, n_sub: int,
                          log2_te: int, col_seed: int, sign_seed: int,
                          sub_seed: int, signed: bool, blk: int = 1024,
-                         w_blk: int = 2048, interpret: bool = False):
+                         w_blk: int = 2048, value_mode: str = "f32",
+                         interpret: bool = False):
     """Lowered pallas_call.  Inputs must be padded to a multiple of blk;
     padded_width a multiple of w_blk (ops.py handles padding).  Columns are
-    hashed modulo the *true* hash_width <= padded_width."""
+    hashed modulo the *true* hash_width <= padded_width.
+
+    The output uses the factored ``(n_sub, width_blocks*J, LANE)``
+    layout — counters for subepoch s, column c live at
+    ``[s, c // LANE, c % LANE]`` — so the kernel's accumulation is a
+    plain leading-dim view of the matmul result; callers reshape to
+    (n_sub, padded_width) for free outside the kernel.
+    """
     p = keys.shape[0]
     assert p % blk == 0 and padded_width % w_blk == 0
     grid = (padded_width // w_blk, p // blk)
+    j_rows = w_blk // LANE
     kernel = functools.partial(
         sketch_update_kernel, hash_width=hash_width, w_blk=w_blk,
         n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
-        sign_seed=sign_seed, sub_seed=sub_seed, signed=signed)
+        sign_seed=sign_seed, sub_seed=sub_seed, signed=signed,
+        value_mode=value_mode)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -153,7 +399,13 @@ def sketch_update_pallas(keys, vals, ts, *, hash_width: int,
             pl.BlockSpec((blk,), lambda i, j: (j,)),
             pl.BlockSpec((blk,), lambda i, j: (j,)),
         ],
-        out_specs=pl.BlockSpec((n_sub, w_blk), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((n_sub, padded_width), jnp.float32),
+        out_specs=pl.BlockSpec((n_sub, j_rows, LANE), lambda i, j: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n_sub, padded_width // LANE, LANE), jnp.float32),
+        # Width blocks touch disjoint counter tiles: parallel (megacore
+        # may split them across TensorCores); the packet axis is the
+        # sequential accumulation.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(keys, vals, ts)

@@ -1,4 +1,5 @@
-"""jit'd public wrapper for the sketch_update kernel: padding + dispatch.
+"""Public wrapper for the sketch_update kernel: padding + mode/geometry
+resolution + dispatch + the output-side overflow guard.
 
 On CPU (this container) the Pallas body runs in interpret mode; on TPU the
 same call lowers to Mosaic.  ``backend="ref"`` selects the pure-jnp oracle.
@@ -7,7 +8,7 @@ Why a matmul and not a scatter
 ------------------------------
 A sketch update is a histogram: ``counters[sub(p), col(p)] += val(p)`` for
 every packet ``p``.  TPUs have no efficient data-dependent scatter, but
-they have an MXU that multiplies (8,128)-tiled f32 matrices at full rate.
+they have an MXU that multiplies (8,128)-tiled matrices at full rate.
 The kernel therefore recasts the histogram as two one-hot contractions:
 
     contribution[s, c] = sum_p onehot_sub[s, p] * val'[p] * onehot_col[p, c]
@@ -23,17 +24,26 @@ Padding contract
 ----------------
 Packet arrays are padded to a BLK multiple with ``value = 0`` entries —
 a zero value times any one-hot contributes nothing, so padding needs no
-masking.  The width is padded to a W_BLK multiple but columns are hashed
-modulo the *true* width, so padded columns are never written and the
-wrapper can slice them off.
+masking (and the kernel skips all-zero value blocks outright).  The width
+is padded to a W_BLK multiple but columns are hashed modulo the *true*
+width, so padded columns are never written and the wrapper can slice them
+off.
 
 Numerical contract
 ------------------
 Counters are f32 accumulations of integer contributions: exact while
-|counter| < 2^24, which every caller in this repo satisfies.  The three
-implementations (this kernel, ref.py's jnp scatter oracle, and the numpy
-fragment path in core/fragment.py) agree bit-for-bit on integer inputs
-(tests/test_kernels.py).
+|counter| < 2^24 (``kernel.EXACT_BOUND``), which this wrapper now
+*enforces* — it raises ``OverflowError`` instead of returning
+silently-inexact counters (``check_overflow=False`` opts out; the check
+is skipped automatically under an outer trace).  The contraction dtype
+is a free knob on top of that contract: one-hots are 0/1 (exact in any
+float dtype) and ``value_mode="auto"`` picks the cheapest exact path —
+a single bf16 contraction for pure counting workloads (integer
+|v| <= 256), a two-limb bf16 split (``val = hi*256 + lo``) for integer
+|v| < 2^16, and the original f32 HIGHEST contraction otherwise.  All
+three agree bit-for-bit with ref.py's jnp scatter oracle and the numpy
+fragment path in core/fragment.py (tests/test_kernels.py,
+tests/test_properties.py).
 
 Fleet variant
 -------------
@@ -53,7 +63,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import resolve_interpret, sketch_update_pallas
+from .kernel import (check_output_peak, pow2_width_cap, resolve_interpret,
+                     resolve_value_mode, select_geometry,
+                     sketch_update_pallas)
 from .ref import sketch_update_ref
 
 
@@ -64,34 +76,70 @@ def _pad_to(x, m):
     return jnp.pad(x, (0, p))
 
 
+_abs_peak = jax.jit(lambda o: jnp.max(jnp.abs(o)))
+
+
+def _guard_peak(out, check_overflow: bool):
+    """Output-side exactness guard (shared contract with the fleet
+    runner's peak check).  Skipped under an outer trace, where the peak
+    is abstract."""
+    if check_overflow and not isinstance(out, jax.core.Tracer):
+        peak = float(_abs_peak(out)) if out.size else 0.0
+        check_output_peak(peak)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=(
     "width", "n_sub", "log2_te", "col_seed", "sign_seed", "sub_seed",
-    "signed", "backend", "blk", "w_blk", "interpret"))
-def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
-                  col_seed: int, sign_seed: int, sub_seed: int,
-                  signed: bool = True, backend: str = "pallas",
-                  blk: int = 1024, w_blk: int = 2048,
-                  interpret="auto"):
-    """Compute all subepoch-record counters for one fragment epoch.
-
-    Returns (n_sub, width) float32 counters (exact integers < 2^24).
-    Padding keys with value 0 contributes nothing (one-hot x 0 = 0).
-    ``interpret="auto"`` (default) compiles on TPU and interprets on CPU.
-    """
-    if backend == "ref":
-        return sketch_update_ref(
-            keys, vals, ts, width=width, n_sub=n_sub, log2_te=log2_te,
-            col_seed=col_seed, sign_seed=sign_seed, sub_seed=sub_seed,
-            signed=signed)
-    interpret = resolve_interpret(interpret)
+    "signed", "blk", "w_blk", "value_mode", "interpret"))
+def _sketch_update_jit(keys, vals, ts, *, width: int, n_sub: int,
+                       log2_te: int, col_seed: int, sign_seed: int,
+                       sub_seed: int, signed: bool, blk: int, w_blk: int,
+                       value_mode: str, interpret: bool):
     keys = _pad_to(keys.astype(jnp.uint32), blk)
     vals = _pad_to(vals.astype(jnp.float32), blk)
     ts = _pad_to(ts.astype(jnp.uint32), blk)
-    w_blk = min(w_blk, int(2 ** np.ceil(np.log2(max(width, 128)))))
+    w_blk = min(w_blk, pow2_width_cap(width))
     pad_w = (-width) % w_blk
     out = sketch_update_pallas(
         keys, vals, ts, hash_width=width, padded_width=width + pad_w,
         n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
         sign_seed=sign_seed, sub_seed=sub_seed, signed=signed, blk=blk,
-        w_blk=w_blk, interpret=interpret)
-    return out[:, :width]
+        w_blk=w_blk, value_mode=value_mode, interpret=interpret)
+    # Undo the kernel's factored (n_sub, W/LANE, LANE) layout: a free
+    # contiguous reshape outside the kernel.
+    return out.reshape(n_sub, width + pad_w)[:, :width]
+
+
+def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
+                  col_seed: int, sign_seed: int, sub_seed: int,
+                  signed: bool = True, backend: str = "pallas",
+                  blk: int = None, w_blk: int = None,
+                  value_mode: str = "auto", interpret="auto",
+                  check_overflow: bool = True):
+    """Compute all subepoch-record counters for one fragment epoch.
+
+    Returns (n_sub, width) float32 counters (exact integers < 2^24,
+    enforced via ``check_overflow``).  Padding keys with value 0
+    contributes nothing (one-hot x 0 = 0).  ``blk``/``w_blk`` default to
+    ``kernel.select_geometry`` for the resolved value mode;
+    ``interpret="auto"`` (default) compiles on TPU and interprets on CPU.
+    """
+    if backend == "ref":
+        out = sketch_update_ref(
+            keys, vals, ts, width=width, n_sub=n_sub, log2_te=log2_te,
+            col_seed=col_seed, sign_seed=sign_seed, sub_seed=sub_seed,
+            signed=signed)
+        return _guard_peak(out, check_overflow)
+    interpret = resolve_interpret(interpret)
+    value_mode = resolve_value_mode(value_mode, vals, interpret)
+    if blk is None or w_blk is None:
+        g_blk, g_w_blk = select_geometry(width, n_sub, value_mode)
+        blk = g_blk if blk is None else blk
+        w_blk = g_w_blk if w_blk is None else w_blk
+    out = _sketch_update_jit(
+        jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(ts), width=width,
+        n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
+        sign_seed=sign_seed, sub_seed=sub_seed, signed=signed, blk=blk,
+        w_blk=w_blk, value_mode=value_mode, interpret=interpret)
+    return _guard_peak(out, check_overflow)

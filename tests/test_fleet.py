@@ -246,6 +246,73 @@ def test_ragged_kernel_matches_dense_and_loop(signed):
         assert not out_ragged[f, :, widths[f]:].any()
 
 
+@pytest.mark.parametrize("signed", [True, False])
+def test_ragged_default_geometry_matches_dense(signed):
+    """Auto-selected geometry (w_blk=None -> kernel.select_geometry) and
+    every value mode stay bit-identical to the dense rectangle and the
+    loop oracle on heterogeneous widths/n_sub."""
+    _, _, _, params, widths, nsubs = _fleet_inputs(5, 700)
+    pkt = _ragged_packet([700, 3, 0, 130, 257], seed=4)
+    blk = 128
+    kw = dict(n_sub_max=16, width_max=1000, log2_te=LOG2_TE, signed=signed)
+    fkeys, fvals, fts, block_frag = pack_csr([pkt], blk)
+    dkeys, dvals, dts = pkt.densify(blk)
+    out_loop = FK.fleet_update_loop(dkeys, dvals, dts, params,
+                                    backend="ref", **kw)
+    for mode in ("f32", "count", "limb"):
+        out_ragged = np.asarray(FK.fleet_update_ragged(
+            jnp.asarray(fkeys), jnp.asarray(fvals), jnp.asarray(fts),
+            jnp.asarray(params), jnp.asarray(block_frag), blk=blk,
+            value_mode=mode, interpret=True, **kw))
+        np.testing.assert_array_equal(out_ragged, out_loop,
+                                      err_msg=f"mode={mode}")
+        out_dense = np.asarray(FK.fleet_update(
+            jnp.asarray(dkeys), jnp.asarray(dvals), jnp.asarray(dts),
+            jnp.asarray(params), blk=blk, value_mode=mode, interpret=True,
+            **kw))
+        np.testing.assert_array_equal(out_dense, out_loop,
+                                      err_msg=f"mode={mode}")
+
+
+def test_grouped_dispatch_matches_single_launch():
+    """dispatch_ragged_grouped (the production default: one launch per
+    distinct n_sub, zero subepoch-row padding) is bit-identical to the
+    single-launch ragged path — per epoch and across a frozen-ns
+    window."""
+    from repro.core.fleet import dispatch_ragged_grouped
+
+    _, _, _, params, widths, nsubs = _fleet_inputs(5, 700)
+    blk = 64
+    kw = dict(n_sub_max=16, width_max=1000, log2_te=LOG2_TE, signed=True,
+              interpret=True)
+    pkts = [_ragged_packet([700, 3, 0, 130, 257], seed=4),
+            _ragged_packet([31, 257, 700, 0, 65], seed=7)]
+    # window: rows are (epoch, fragment) pairs with per-epoch seeds
+    params_w = np.concatenate([params, params + np.array(
+        [[7, 7, 7, 0, 0, 0, 0, 0]], np.int32)])
+    fkeys, fvals, fts, block_frag = pack_csr(pkts, blk)
+    single = np.asarray(FK.fleet_update_ragged(
+        jnp.asarray(fkeys), jnp.asarray(fvals), jnp.asarray(fts),
+        jnp.asarray(params_w), jnp.asarray(block_frag), blk=blk, **kw))
+    grouped = np.asarray(dispatch_ragged_grouped(
+        params_w, pkts, blk=blk, **kw))
+    np.testing.assert_array_equal(grouped, single)
+    # runner-level: grouping on/off drives the same system trajectory
+    wl, rep, mems = _small_workload(n_epochs=2)
+    a = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=wl.log2_te,
+                       backend="fleet", fleet_kwargs=FLEET_KW)
+    b = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=wl.log2_te,
+                       backend="fleet",
+                       fleet_kwargs=dict(group_by_n_sub=False, **FLEET_KW))
+    rep.run(a)
+    rep.run(b)
+    assert a.ns == b.ns
+    for e in range(wl.n_epochs):
+        for sw in mems:
+            np.testing.assert_array_equal(a.records[e][sw].counters,
+                                          b.records[e][sw].counters)
+
+
 def test_pack_csr_layout():
     """CSR contract: blk-aligned segments, >= 1 block per row (empty rows
     included), a non-decreasing block->row map covering every row, and

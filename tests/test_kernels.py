@@ -89,6 +89,68 @@ def test_kernel_values_and_blocks():
     assert float(jnp.abs(out_p).sum()) > 0
 
 
+@pytest.mark.parametrize("width,n_sub", [(1000, 4), (2048, 16), (129, 1)])
+@pytest.mark.parametrize("vmax", [255, 65535])
+def test_bf16_modes_bitwise_equal_f32(width, n_sub, vmax):
+    """Non-hypothesis twin of the bf16 bit-identity property test, so
+    tier-1 covers the count/limb paths even without hypothesis."""
+    rng = np.random.RandomState(width * 7 + vmax)
+    p = 512
+    keys = rng.randint(0, 700, p).astype(np.uint32)
+    vals = rng.randint(1, vmax + 1, p).astype(np.float32)
+    ts = rng.randint(0, 1 << LOG2_TE, p).astype(np.uint32)
+    kw = dict(width=width, n_sub=n_sub, log2_te=LOG2_TE, col_seed=9,
+              sign_seed=8, sub_seed=7, signed=True)
+    ref = np.asarray(sketch_update(jnp.asarray(keys), jnp.asarray(vals),
+                                   jnp.asarray(ts), backend="ref", **kw))
+    modes = ["f32", "limb"] + (["count"] if vmax <= 256 else [])
+    for mode in modes:
+        got = np.asarray(sketch_update(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(ts),
+            backend="pallas", interpret=True, value_mode=mode, blk=256,
+            **kw))
+        np.testing.assert_array_equal(got, ref, err_msg=f"mode={mode}")
+
+
+def test_value_mode_resolution():
+    """'auto' picks the cheapest exact path from concrete values; falls
+    back to f32 under tracing or on the interpret (CPU) backend."""
+    from repro.kernels.sketch_update.kernel import resolve_value_mode
+
+    ones = np.ones(64, np.float32)
+    assert resolve_value_mode("auto", ones) == "count"
+    assert resolve_value_mode("auto", ones * 256) == "count"
+    assert resolve_value_mode("auto", ones * 257) == "limb"
+    assert resolve_value_mode("auto", ones * 65535) == "limb"
+    assert resolve_value_mode("auto", ones * 65536) == "f32"
+    assert resolve_value_mode("auto", ones * 0.5) == "f32"     # fractional
+    assert resolve_value_mode("auto", ones, interpret=True) == "f32"
+    assert resolve_value_mode("limb", ones * 0.5) == "limb"    # explicit wins
+    out = jax.jit(lambda v: jnp.float32(0)
+                  if resolve_value_mode("auto", v) == "f32" else None)(ones)
+    assert float(out) == 0.0                                   # tracer -> f32
+    with pytest.raises(ValueError, match="value_mode"):
+        resolve_value_mode("fp8", ones)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_single_fragment_overflow_guard(backend):
+    """The 'exact while < 2^24' contract is enforced on the
+    single-fragment path too, not just the fleet runner."""
+    keys = np.full(8, 5, np.uint32)
+    vals = np.full(8, 1 << 23, np.float32)
+    ts = np.zeros(8, np.uint32)
+    kw = dict(width=64, n_sub=1, log2_te=LOG2_TE, col_seed=1, sign_seed=2,
+              sub_seed=3, signed=False, backend=backend, interpret=True)
+    with pytest.raises(OverflowError, match="2\\^24"):
+        sketch_update(jnp.asarray(keys), jnp.asarray(vals),
+                      jnp.asarray(ts), **kw)
+    # explicit opt-out returns (possibly inexact) counters instead
+    out = sketch_update(jnp.asarray(keys), jnp.asarray(vals),
+                        jnp.asarray(ts), check_overflow=False, **kw)
+    assert float(jnp.abs(out).max()) >= 2 ** 24
+
+
 def test_kernel_grad_compression_sketch():
     """The DisketchCompressor sketch/estimate roundtrip recovers a sparse
     heavy-hitter gradient."""

@@ -126,3 +126,51 @@ def test_synthetic_data_in_vocab(seed):
     d = SyntheticLM(vocab=777, seq_len=8, batch_per_host=2, seed=seed)
     b = d.batch(0)
     assert b["tokens"].min() >= 0 and b["tokens"].max() < 777
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(4, 3000),
+       st.sampled_from([1, 2, 4, 8, 16]),
+       st.booleans(),
+       st.sampled_from([1, 255, 4095, 65535]),
+       st.integers(0, 2**31 - 1))
+def test_bf16_value_modes_bit_identical(width, n_sub, signed, vmax, seed):
+    """The limb-split/count bf16 contractions are *bit-identical* to the
+    f32 kernel and the jnp scatter oracle for any integer workload
+    within their bounds — 256 packets of |value| <= 65535 keeps every
+    counter below the 2^24 exactness contract (256 * 65535 < 2^24)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.sketch_update.ops import sketch_update
+
+    rng = np.random.RandomState(seed % 2**31)
+    p = 256
+    keys = rng.randint(0, 500, p).astype(np.uint32)
+    vals = rng.randint(1, vmax + 1, p).astype(np.float32)
+    ts = rng.randint(0, 1 << LOG2_TE, p).astype(np.uint32)
+    kw = dict(width=width, n_sub=n_sub, log2_te=LOG2_TE, col_seed=seed % 97,
+              sign_seed=seed % 89, sub_seed=seed % 83, signed=signed)
+    ref = np.asarray(sketch_update(jnp.asarray(keys), jnp.asarray(vals),
+                                   jnp.asarray(ts), backend="ref", **kw))
+    modes = ["f32", "limb"] + (["count"] if vmax <= 256 else [])
+    for mode in modes:
+        got = np.asarray(sketch_update(
+            jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(ts),
+            backend="pallas", interpret=True, value_mode=mode, blk=128,
+            **kw))
+        np.testing.assert_array_equal(got, ref, err_msg=f"mode={mode}")
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(100, 100000), st.sampled_from([1, 2, 4, 8, 16, 64]),
+       st.sampled_from(["count", "limb", "f32"]))
+def test_select_geometry_respects_budget(width, n_sub, mode):
+    """Any auto-selected geometry fits the VMEM budget, is 128-aligned,
+    and never exceeds the padded width."""
+    from repro.kernels.sketch_update.kernel import (VMEM_BUDGET_BYTES,
+                                                    select_geometry,
+                                                    vmem_bytes)
+    blk, w_blk = select_geometry(width, n_sub, mode)
+    assert blk % 128 == 0 and w_blk % 128 == 0
+    assert w_blk <= max(1 << int(np.ceil(np.log2(max(width, 128)))), 128)
+    assert vmem_bytes(blk, w_blk, n_sub, mode) <= VMEM_BUDGET_BYTES
