@@ -33,7 +33,7 @@ import numpy as np
 from .common import emit
 
 _MATCH_COLS = ("pallas_matches_ref", "fleet_matches_loop",
-               "ragged_matches_dense")
+               "ragged_matches_dense", "query_matches_oracle")
 SCHEMA = 2
 #: headline metrics gated against the committed baseline (>20% drop fails)
 _GATED = ("ragged_pkts_per_s", "uniform_fleet_speedup_x")
@@ -80,6 +80,15 @@ def headline_from_rows(rows, quick: bool = True) -> dict:
         elif r.get("bench") == "ragged_vs_dense_skewed":
             h["ragged_pkts_per_s"] = r["pkts_per_s"]
             h["ragged_speedup_x_vs_dense"] = r["ragged_speedup_x"]
+        elif r.get("bench") == "query_plane":
+            # device query plane: best keys/sec across kinds + the
+            # host-boundary bytes the device path avoids (not gated —
+            # new metric, no committed baseline class yet)
+            h["query_keys_per_s"] = max(h.get("query_keys_per_s", 0),
+                                        r["pkts_per_s"])
+            h["query_host_bytes_saved_x"] = max(
+                h.get("query_host_bytes_saved_x", 0),
+                r["host_bytes_saved_x"])
     return h
 
 
@@ -245,7 +254,8 @@ def run(quick: bool = True):
             "ref_pkts_per_s": round(p / t_ref),
         })
     emit("kernel_bench", [r for r in rows if r["bench"] == "single_kernel"])
-    rows = rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
+    rows = (rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
+            + run_query_plane(quick=quick))
     headline = headline_from_rows(rows, quick=quick)
     path = write_bench_json(rows, headline)
     print(f"headline: {json.dumps(headline)}")
@@ -470,6 +480,107 @@ def run_fleet_ragged(quick: bool = True):
     })
     emit("kernel_bench_ragged",
          [r for r in rows if r["bench"] == "ragged_vs_dense_skewed"])
+    return rows
+
+
+def run_query_plane(quick: bool = True):
+    """Device-resident query plane vs the host-transfer oracle on an
+    epoch-window stack (the §4.3 batched gather/merge engine,
+    ``repro.kernels.sketch_query``).
+
+    Measures keys/sec through the jitted device engine (the key-batch
+    size is the autotuned knob — buckets are compiled shapes, so the
+    sweep finds the batch that amortizes dispatch best) against the
+    numpy oracle on pre-transferred host stacks, and records the *host
+    boundary bytes* each path moves per query: the device path ships
+    the key batch down and the (K,) float64 estimates back; the
+    host path must first move (and widen to int64) the entire
+    ``(E, F, n_sub_max, width_max)`` counter stack.  ``pkts_per_s``
+    carries keys/sec here (the shared throughput column).
+    """
+    import jax.numpy as jnp
+    from repro.core import query as Q
+    from repro.kernels.sketch_query import fleet_window_query_device
+    from repro.kernels.sketch_update import fleet as FK
+
+    rng = np.random.RandomState(4)
+    e_count = 4
+    n_frags = 16 if quick else 32
+    n_sub_max, width_max = 16, 2048
+    widths = ([512, 2048, 1024, 2048, 256, 2048, 512, 1024] * 4)[:n_frags]
+    nsubs = ([4, 8, 2, 16, 1, 8, 4, 2] * 4)[:n_frags]
+    stack = np.zeros((e_count, n_frags, n_sub_max, width_max), np.float32)
+    params = np.zeros((e_count, n_frags, FK.N_PARAMS), np.int32)
+    for e in range(e_count):
+        for f in range(n_frags):
+            # integer counters, exact zeros outside the live block (the
+            # fleet-kernel stacked-layout contract)
+            stack[e, f, :nsubs[f], :widths[f]] = rng.randint(
+                -500, 500, (nsubs[f], widths[f]))
+            params[e, f, FK.PARAM_COL_SEED] = 101 + 37 * e + f
+            params[e, f, FK.PARAM_SIGN_SEED] = 202 + 37 * e + f
+            params[e, f, FK.PARAM_SUB_SEED] = 303 + 37 * e + f
+            params[e, f, FK.PARAM_WIDTH] = widths[f]
+            params[e, f, FK.PARAM_N_SUB] = nsubs[f]
+            params[e, f, FK.PARAM_LOG2_N_SUB] = nsubs[f].bit_length() - 1
+    stack_dev = jnp.asarray(stack)
+    host_stacks = [stack[e].astype(np.int64) for e in range(e_count)]
+    host_params = [params[e] for e in range(e_count)]
+    widths_arr = np.asarray(widths, np.int64)
+    frag_sel = np.zeros(n_frags, bool)
+    frag_sel[::3] = True                  # a §4.3 path restriction
+
+    rows, winners = [], {}
+    k_sweep = (256, 1024, 4096) if quick else (256, 1024, 4096, 16384)
+    for kind in ("cms", "cs"):
+        st_dev = jnp.abs(stack_dev) if kind == "cms" else stack_dev
+        hs = [np.abs(h) for h in host_stacks] if kind == "cms" \
+            else host_stacks
+        best = None
+        for n_keys in k_sweep:
+            keys = rng.randint(0, 1 << 20, n_keys).astype(np.uint32)
+            ok = all(
+                np.allclose(
+                    fleet_window_query_device(st_dev, host_params, keys,
+                                              kind, frag_sel=sel),
+                    Q.fleet_query_window(hs, host_params, widths_arr,
+                                         keys, kind, frag_sel=sel),
+                    rtol=1e-6)
+                for sel in (None, frag_sel))
+            t_dev = _time_call(lambda: fleet_window_query_device(
+                st_dev, host_params, keys, kind))
+            t_host = _time_call(lambda: Q.fleet_query_window(
+                hs, host_params, widths_arr, keys, kind))
+            row = {"bench": "query_tune", "kind": kind, "n_keys": n_keys,
+                   "query_matches_oracle": bool(ok),
+                   "pkts_per_s": round(n_keys / t_dev),
+                   "host_keys_per_s": round(n_keys / t_host)}
+            rows.append(row)
+            if ok and (best is None
+                       or row["pkts_per_s"] > best["pkts_per_s"]):
+                best = row
+        if best is not None:
+            winners[kind] = best
+    for kind, win in winners.items():
+        n_keys = win["n_keys"]
+        dev_bytes = n_keys * 4 + n_keys * 8      # keys down, f64 out back
+        stack_bytes = stack.nbytes               # f32 across the boundary
+        rows.append({
+            "bench": "query_plane", "kind": kind,
+            "e_count": e_count, "n_frags": n_frags,
+            "n_sub_max": n_sub_max, "width_max": width_max,
+            "n_keys": n_keys,
+            "query_matches_oracle": all(
+                r["query_matches_oracle"] for r in rows
+                if r["bench"] == "query_tune" and r["kind"] == kind),
+            "pkts_per_s": win["pkts_per_s"],
+            "host_keys_per_s": win["host_keys_per_s"],
+            "host_bytes_per_query_device": dev_bytes,
+            "host_bytes_window_transfer": stack_bytes,
+            "host_bytes_saved_x": round(stack_bytes / dev_bytes, 1),
+        })
+    emit("kernel_bench_query",
+         [r for r in rows if r["bench"] == "query_plane"])
     return rows
 
 

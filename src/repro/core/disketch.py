@@ -161,20 +161,45 @@ class DiSketchSystem:
 
     def _records_for(self, path: Sequence[int],
                      epochs: Sequence[int]) -> List[List[EpochRecords]]:
+        # A window query over an unprocessed epoch must fail loudly: a
+        # silently dropped epoch truncates the O_Q = Sum(O) estimate,
+        # which looks like sketch error, not like the caller's bug it is
+        # (matches FleetEpochRunner.window_query).
+        missing = [e for e in epochs if e not in self.records]
+        if missing:
+            raise KeyError(f"epochs {missing} have no records "
+                           "(not processed); run them before querying")
         return [[self.records[e][sw] for sw in path if sw in self.records[e]]
-                for e in epochs if e in self.records]
+                for e in epochs]
 
     def query_flows(self, keys: np.ndarray, paths: Sequence[Tuple[int, ...]],
                     epochs: Sequence[int],
                     merge: str = "subepoch") -> np.ndarray:
-        """Window frequency estimates for flows with per-flow paths."""
+        """Window frequency estimates for flows with per-flow paths.
+
+        On the fleet backend with ``merge="fragment"``, windows whose
+        counter stacks are still device-resident (processed via
+        ``run_window`` and not yet materialized) are answered by the
+        on-device query plane — only the per-path ``(K,)`` estimate
+        vectors cross the host boundary.  Everything else (the default
+        subepoch merge, loop backend, materialized windows) goes through
+        the per-record composite query over ``self.records``.
+        """
         keys = np.asarray(keys, dtype=np.uint32)
         out = np.zeros(len(keys))
         by_path: Dict[Tuple[int, ...], List[int]] = {}
         for i, p in enumerate(paths):
             by_path.setdefault(tuple(p), []).append(i)
+        device_ok = (merge == "fragment" and self.fleet is not None
+                     and self.fleet.has_device_window(epochs))
         for path, idxs in by_path.items():
             idxs = np.asarray(idxs)
+            if device_ok:
+                # single_hop is irrelevant here: the fleet backend
+                # rejects §4.4 mitigation, the only consumer of it.
+                out[idxs] = self.fleet.window_query(epochs, keys[idxs],
+                                                    path=path)
+                continue
             sh = np.full(len(idxs), len(path) == 1)
             out[idxs] = query.query_window(
                 self._records_for(path, epochs), keys[idxs], self.kind,
@@ -271,6 +296,13 @@ class AggregatedSystem:
                     epochs: Sequence[int]) -> np.ndarray:
         """Query each flow at the (single) core switch on its path."""
         keys = np.asarray(keys, dtype=np.uint32)
+        # same loud-failure contract as DiSketchSystem._records_for: a
+        # silently skipped epoch truncates O_Q and skews baseline
+        # comparisons one-sidedly
+        missing = [e for e in epochs if e not in self.counters]
+        if missing:
+            raise KeyError(f"epochs {missing} have no counters "
+                           "(not processed); run them before querying")
         out = np.zeros(len(keys))
         by_sw: Dict[int, List[int]] = {}
         for i, sw in enumerate(core_switch):
@@ -279,8 +311,6 @@ class AggregatedSystem:
             idxs = np.asarray(idxs)
             spec = self.specs[sw]
             for e in epochs:
-                if e not in self.counters:
-                    continue
                 c = self.counters[e][sw]
                 if self.kind == "um":
                     out[idxs] += sketches.um_query_freq(spec, c, keys[idxs])

@@ -216,7 +216,8 @@ def build_params(fragments: Dict[int, FragmentConfig], epoch: int,
 def dispatch_ragged_grouped(params: np.ndarray,
                             packets: Sequence[FleetPacket], *,
                             n_sub_max: int, width_max: int, log2_te: int,
-                            signed: bool, blk: int = 256, w_blk=None,
+                            signed: bool, blk: int = 256,
+                            w_blk: Optional[int] = None,
                             interpret="auto", value_mode: str = "auto"):
     """Ragged CSR dispatch with fragments *grouped by subepoch count*.
 
@@ -296,13 +297,33 @@ class _WindowBuffer:
 
     Holds the raw ``(E, F, n_sub_max, width_max)`` f32 device array; the
     host transfer + int64 conversion happens exactly once, on first
-    ``host()`` call, after which the device buffer is released.
+    ``host()`` call, after which the device buffer is released.  While
+    the buffer is still ``resident``, ``device()`` exposes the stack to
+    the batched on-device query plane (``kernels.sketch_query``) — point
+    and window queries then never trigger the transfer at all.
     """
 
     def __init__(self, dev, shape: Tuple[int, ...]):
         self._dev = dev
         self._shape = shape
         self._host: Optional[np.ndarray] = None
+
+    @property
+    def resident(self) -> bool:
+        """True while the counters have not been transferred to host."""
+        return self._dev is not None
+
+    def device(self):
+        """The still-resident ``(E, F, n_sub_max, width_max)`` f32 stack
+        as a jax array (None once transferred).  On CPU the one-time
+        jnp conversion is cached — "device" memory is host memory there
+        anyway."""
+        if self._dev is None:
+            return None
+        import jax.numpy as jnp
+
+        self._dev = jnp.asarray(self._dev).reshape(self._shape)
+        return self._dev
 
     def host(self) -> np.ndarray:
         if self._host is None:
@@ -367,9 +388,17 @@ class FleetEpochRunner:
     rectangle as an oracle), dispatches one ``fleet_update_ragged``, and
     unpacks ``EpochRecords`` + PEBs.  ``run_window`` batches E epochs
     into one super-dispatch with frozen ``ns`` and device-resident
-    counters.  ``keep_stacked=True`` additionally retains the raw
-    stacked counters per epoch for ``point_query``/``window_query`` (the
-    batched query-side ops).  ``interpret="auto"`` (default) compiles on
+    counters; window epochs are queryable via
+    ``point_query``/``window_query`` straight from the resident device
+    stack, no retention flag needed.  ``keep_stacked=True`` additionally
+    retains per-epoch *host* stacks from ``run_epoch`` so the batched
+    query ops also cover per-epoch dispatches (for window epochs, host
+    stacks are cached lazily on first host-path access —
+    ``run_window`` itself never forces the transfer).  Window stacks
+    stay device-resident until the record plane or a host-path query
+    materializes them; on accelerator deployments, materialize windows
+    you are finished querying to release their HBM.
+    ``interpret="auto"`` (default) compiles on
     TPU and interprets on CPU; ``value_mode="auto"`` picks the cheapest
     exact bf16/f32 contraction path per dispatch from the packed values
     (all modes are bit-identical — see kernels/sketch_update/kernel.py);
@@ -377,7 +406,7 @@ class FleetEpochRunner:
     """
 
     def __init__(self, fragments: Dict[int, FragmentConfig], log2_te: int,
-                 *, blk: int = 256, w_blk: int = None,
+                 *, blk: int = 256, w_blk: Optional[int] = None,
                  interpret="auto", keep_stacked: bool = False,
                  layout: str = "ragged", value_mode: str = "auto",
                  group_by_n_sub: bool = True):
@@ -407,6 +436,12 @@ class FleetEpochRunner:
                                 for sw in self.frag_order], np.int64)
         self.stacked: Dict[int, np.ndarray] = {}
         self._params_log: Dict[int, np.ndarray] = {}
+        # epoch -> (window buffer, epoch index within the window); filled
+        # by run_window so queries can run on the still-resident stack.
+        # The buffers are the same objects the returned WindowRecords
+        # hold, so this registry does not extend their lifetime for
+        # systems that retain records (DiSketchSystem always does).
+        self._window_bufs: Dict[int, Tuple[_WindowBuffer, int]] = {}
 
     # Exactness bound.  Counters are f32 accumulations: exact while
     # every intermediate magnitude stays below 2^24.  For unsigned (cms)
@@ -494,9 +529,16 @@ class FleetEpochRunner:
                 stacked[i, :n, :cfg.width].copy(), cfg.kind,
                 cfg.mitigation, cfg.base_seed)
             pebs[sw] = float(pebs_arr[i])
+        # A reprocessed epoch invalidates any window retention for it:
+        # a stale resident buffer would silently answer queries with the
+        # previous run's counters/seeds.
+        self._window_bufs.pop(epoch, None)
         if self.keep_stacked:
             self.stacked[epoch] = stacked
             self._params_log[epoch] = params
+        else:
+            self.stacked.pop(epoch, None)
+            self._params_log.pop(epoch, None)
         return recs, pebs
 
     def run_window(self, epoch0: int, ns: Dict[int, int],
@@ -546,12 +588,18 @@ class FleetEpochRunner:
                                            n_arr))
             pebs_list.append({sw: float(pebs_all[e, i])
                               for i, sw in enumerate(self.frag_order)})
-        if self.keep_stacked:
-            host = buf.host()
-            for e in range(e_count):
-                self.stacked[epoch0 + e] = host[e]
-                self._params_log[epoch0 + e] = \
-                    params[e * n_frags:(e + 1) * n_frags]
+            # Point/window queries are served straight from the resident
+            # buffer (kernels.sketch_query) — no keep_stacked required,
+            # and no eager host() transfer: forcing the transfer here is
+            # exactly what window mode exists to avoid.  Host stacks
+            # materialize lazily (``_host_stack``) only if something
+            # transfers the buffer first.
+            self._window_bufs[epoch0 + e] = (buf, e)
+            self._params_log[epoch0 + e] = \
+                params[e * n_frags:(e + 1) * n_frags]
+            # drop any stale per-epoch retention from a previous run of
+            # the same epoch — its counters pair with the OLD seeds
+            self.stacked.pop(epoch0 + e, None)
         return recs_list, pebs_list
 
     def point_query(self, epoch: int, keys: np.ndarray,
@@ -565,22 +613,76 @@ class FleetEpochRunner:
         """
         return self.window_query([epoch], keys, path=path)
 
+    def has_device_window(self, epochs: Sequence[int]) -> bool:
+        """True when every epoch's window stack is still device-resident,
+        i.e. ``window_query`` will run entirely on device and transfer
+        only the ``(K,)`` estimates."""
+        return all(e in self._window_bufs
+                   and self._window_bufs[e][0].resident for e in epochs)
+
+    def _host_stack(self, epoch: int) -> np.ndarray:
+        """Host counters for one retained epoch: the per-epoch
+        ``keep_stacked`` copy, or the epoch's slice of an
+        already-transferred window buffer."""
+        stack = self.stacked.get(epoch)
+        if stack is None:
+            buf, e_idx = self._window_bufs[epoch]
+            stack = buf.host()[e_idx]
+            self.stacked[epoch] = stack
+        return stack
+
     def window_query(self, epochs: Sequence[int], keys: np.ndarray,
                      path: Optional[Sequence[int]] = None) -> np.ndarray:
         """Batched point-query summed over a query window (O_Q = Sum(O))
-        on the retained stacked counters — the fleet twin of
-        ``query.query_window(merge="fragment")``."""
+        — the fleet twin of ``query.query_window(merge="fragment")``.
+
+        Epochs processed through ``run_window`` are served **on device**
+        while their window stack is still resident
+        (``query.fleet_query_window_device``: hashes, the gather, and
+        the §4.3 min/median merge all run next to the counters, and only
+        the ``(K,)`` estimate vector crosses the host boundary).  Epochs
+        whose counters already live on the host — per-epoch
+        ``keep_stacked`` runs, or windows the record plane has
+        materialized — go through the numpy oracle
+        ``query.fleet_query_window``.  The two paths agree within f32
+        rounding (a few ULPs) and may be mixed freely in one call.
+        """
         from . import query as Q
 
-        missing = [e for e in epochs if e not in self.stacked]
+        keys = np.asarray(keys, np.uint32)
+        missing = [e for e in epochs
+                   if e not in self.stacked and e not in self._window_bufs]
         if missing:
-            raise KeyError(f"epochs {missing} not retained "
-                           "(construct with keep_stacked=True)")
+            raise KeyError(
+                f"epochs {missing} not retained (process them with "
+                "run_window, or construct with keep_stacked=True for "
+                "per-epoch runs)")
         frag_sel = None
         if path is not None:
             on_path = set(path)
             frag_sel = np.array([sw in on_path for sw in self.frag_order])
-        return Q.fleet_query_window(
-            [self.stacked[e] for e in epochs],
-            [self._params_log[e] for e in epochs],
-            self.widths, keys, self.kind, frag_sel=frag_sel)
+
+        out = np.zeros(len(keys))
+        host_epochs: List[int] = []
+        by_buf: Dict[int, Tuple[_WindowBuffer, List[int]]] = {}
+        for e in epochs:
+            ent = self._window_bufs.get(e)
+            if ent is not None and ent[0].resident:
+                by_buf.setdefault(id(ent[0]), (ent[0], []))[1].append(e)
+            else:
+                host_epochs.append(e)
+        for buf, es in by_buf.values():
+            stack = buf.device()
+            idx = np.array([self._window_bufs[e][1] for e in es], np.int64)
+            if len(idx) != stack.shape[0] \
+                    or (idx != np.arange(len(idx))).any():
+                stack = stack[idx]          # device-side epoch gather
+            out += Q.fleet_query_window_device(
+                stack, [self._params_log[e] for e in es], keys, self.kind,
+                frag_sel=frag_sel)
+        if host_epochs:
+            out += Q.fleet_query_window(
+                [self._host_stack(e) for e in host_epochs],
+                [self._params_log[e] for e in host_epochs],
+                self.widths, keys, self.kind, frag_sel=frag_sel)
+        return out

@@ -8,6 +8,12 @@ paper).
 
 All functions work identically under numpy and jax.numpy: unsigned-integer
 overflow is well-defined wraparound in both.  ``xp`` selects the backend.
+
+``seed``/``mod``/``n`` may be scalars or arrays (broadcast against
+``keys``): the batched query paths hash one key batch under *every*
+fragment's seed/width/subepoch-count at once — host-side in
+``core.query.fleet_query_epoch`` (numpy) and on device in
+``kernels.sketch_query`` (jnp, inside jit with traced seed arrays).
 """
 from __future__ import annotations
 

@@ -209,6 +209,24 @@ def fleet_query_window(stacked_by_epoch: Sequence[np.ndarray],
     return out
 
 
+def fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
+                              kind: str,
+                              frag_sel: Optional[np.ndarray] = None,
+                              ) -> np.ndarray:
+    """Device-side twin of ``fleet_query_window``: the same §4.3
+    fragment-merge window query, run where the stacked counters already
+    live so only the ``(K,)`` estimate vector crosses the host boundary.
+    Thin re-export of the jitted gather/merge engine — see
+    ``repro.kernels.sketch_query.fleet_window_query_device`` for the
+    argument contract; ``fleet_query_window`` on the host copy of the
+    same stack stays the numpy oracle (tests/test_query_device.py).
+    """
+    from ..kernels.sketch_query import fleet_window_query_device
+
+    return fleet_window_query_device(stack, params_by_epoch, keys, kind,
+                                     frag_sel=frag_sel)
+
+
 def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],
                  keys: np.ndarray, kind: str,
                  single_hop: Optional[np.ndarray] = None,

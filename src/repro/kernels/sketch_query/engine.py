@@ -1,0 +1,161 @@
+"""Device-resident batched query plane (paper §4.3): gather + merge over a
+window's stacked counters, without the bulk device->host transfer.
+
+The fleet update path (``kernels/sketch_update/fleet.py``) leaves a whole
+epoch window's counters on device as one ``(E, F, n_sub_max, width_max)``
+f32 stack.  Until now, answering a single point query forced the entire
+stack across the host boundary (megabytes per window) so the numpy query
+plane could gather a handful of counters from it.  FPGA/switch sketch
+accelerators answer queries *next to the counters* for exactly this
+reason — the query is a tiny gather, the transfer is the whole sketch.
+
+This module is the TPU twin: one jitted fused pass that
+
+  1. recomputes every fragment's column/sign/subepoch hashes for the key
+     batch on device (same uint32 avalanche arithmetic as
+     ``repro.core.hashing`` — the hashing module is backend-polymorphic
+     via its ``xp`` parameter, so the *same code* runs here under jnp);
+  2. gathers each (epoch, fragment)'s raw estimate
+     ``stack[e, f, sub(e,f,k), col(e,f,k)]`` for all keys at once (one
+     XLA gather over the resident stack);
+  3. applies the §4.3 fragment-merge per epoch — min across fragments for
+     Count-Min, a masked median for Count Sketch (``frag_sel`` restricts
+     the merge to the queried flows' on-path fragments, §4.3 Step 1);
+  4. sums the per-epoch estimates over the window (O_Q = Sum(O)).
+
+Only the key batch and the small per-epoch seed tables cross *into* the
+device, and only the ``(K,)`` estimate vector crosses *back* — the
+counter stack never moves.  A hand-written Pallas kernel buys nothing
+here: the work is a data-dependent gather plus tiny reductions (no MXU
+contraction to feed), which XLA already lowers well, and the jnp form
+runs identically on CPU where the update kernels use interpret mode.
+
+Exactness: counters are exact integers in f32 (the update path enforces
+``|c| < 2^24``) and the x``n`` proportional scaling (§1) multiplies by a
+power of two, so every per-fragment estimate is exact in f32; min/median
+*selection* is therefore identical to the float64 host oracle
+(``repro.core.query.fleet_query_window``), and only the CS median's
+midpoint average and the final window sum accumulate f32 rounding —
+within a few ULPs (<< 1e-6 relative), which is the documented contract.
+
+Key batches are padded to power-of-two buckets so a replay's varying
+query sizes trigger O(log K) compiles instead of one per batch size.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core import hashing as H
+from ..sketch_update.fleet import (PARAM_COL_SEED, PARAM_N_SUB,
+                                   PARAM_SIGN_SEED, PARAM_SUB_SEED,
+                                   PARAM_WIDTH)
+
+#: Smallest compiled key-batch size (batches are padded up to the next
+#: power of two — O(log K) compiled variants across a replay).
+KEY_BUCKET_MIN = 8
+
+
+def key_bucket(n_keys: int) -> int:
+    """Power-of-two key-batch bucket, floored at ``KEY_BUCKET_MIN``."""
+    return max(KEY_BUCKET_MIN, 1 << max(int(n_keys) - 1, 0).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def _gather_merge(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+                  frag_sel, keys, *, kind: str):
+    """Fused device pass: (E, F, S, W) stack + (K,) keys -> (K,) window
+    estimates.
+
+    ``col_seeds``/``sign_seeds``/``sub_seeds`` are (E, F) uint32 (seeds
+    are per-epoch); ``ns``/``widths`` are (F,) int32 (frozen across the
+    window — the ``run_window`` contract); ``frag_sel`` is (F,) bool.
+    Passing the selection as data (rather than slicing fragments out)
+    keeps the compiled shape independent of the queried path.
+    """
+    e_count, n_frags = stack.shape[:2]
+    k = keys[None, None, :]                               # (1, 1, K)
+    col = H.hash_mod(k, col_seeds[:, :, None], widths[None, :, None],
+                     xp=jnp)                              # (E, F, K)
+    sub = H.hash_pow2(k, sub_seeds[:, :, None], ns[None, :, None], xp=jnp)
+    raw = stack[jnp.arange(e_count)[:, None, None],
+                jnp.arange(n_frags)[None, :, None], sub, col]  # (E, F, K)
+    if kind in ("cs", "um"):
+        raw = raw * H.hash_sign(k, sign_seeds[:, :, None],
+                                xp=jnp).astype(jnp.float32)
+    # Proportional scaling to the epoch (x n, §1): n is a power of two,
+    # so the product stays exact in f32.
+    raw = raw * ns[None, :, None].astype(jnp.float32)
+    masked = jnp.where(frag_sel[None, :, None], raw, jnp.inf)
+    if kind == "cms":
+        per_epoch = jnp.min(masked, axis=1)               # (E, K)
+    else:
+        # Masked median: +inf-masked entries sort to the top, so ranks
+        # (m-1)//2 and m//2 of the ascending sort are the two middle
+        # *selected* values (m = number of on-path fragments).
+        srt = jnp.sort(masked, axis=1)
+        m = jnp.sum(frag_sel).astype(jnp.int32)
+        shape = (e_count, 1, srt.shape[2])
+        lo = jnp.take_along_axis(srt, jnp.broadcast_to((m - 1) // 2, shape),
+                                 axis=1)
+        hi = jnp.take_along_axis(srt, jnp.broadcast_to(m // 2, shape),
+                                 axis=1)
+        per_epoch = (0.5 * (lo + hi))[:, 0, :]
+    return per_epoch.sum(axis=0)                          # (K,)
+
+
+def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
+                              keys: np.ndarray, kind: str,
+                              frag_sel: Optional[np.ndarray] = None,
+                              ) -> np.ndarray:
+    """Batched window point-query on a still-resident window stack.
+
+    Args:
+      stack: ``(E, F, n_sub_max, width_max)`` f32 counter stack — a
+        device array on TPU (the point: it never transfers), any
+        jnp-compatible array on CPU.
+      params_by_epoch: E host ``(F, N_PARAMS)`` int32 fleet parameter
+        tables (seeds differ per epoch; ``n_sub``/``width`` columns must
+        be frozen across the window, as ``run_window`` guarantees).
+      keys: (K,) uint32 key batch.
+      kind: "cs" | "cms".
+      frag_sel: optional (F,) bool on-path fragment mask (§4.3 Step 1).
+
+    Returns the (K,) float64 window estimates — numerically within a few
+    f32 ULPs of ``repro.core.query.fleet_query_window`` on the host copy
+    of the same stack (exact-selection argument in the module doc).
+    """
+    keys = np.asarray(keys, dtype=np.uint32)
+    n_keys = len(keys)
+    params = np.stack([np.asarray(p, np.int32) for p in params_by_epoch])
+    e_count, n_frags = params.shape[:2]
+    assert tuple(stack.shape[:2]) == (e_count, n_frags), \
+        f"stack {stack.shape} does not match params ({e_count}, {n_frags})"
+    ns = params[0, :, PARAM_N_SUB]
+    widths = params[0, :, PARAM_WIDTH]
+    assert (params[:, :, PARAM_N_SUB] == ns).all() and \
+        (params[:, :, PARAM_WIDTH] == widths).all(), \
+        "device window query requires ns/widths frozen across the window"
+    if frag_sel is None:
+        frag_sel = np.ones(n_frags, bool)
+    frag_sel = np.asarray(frag_sel, bool)
+    if n_keys == 0 or n_frags == 0 or not frag_sel.any():
+        return np.zeros(n_keys)
+    kb = key_bucket(n_keys)
+    keys_pad = np.zeros(kb, np.uint32)
+    keys_pad[:n_keys] = keys
+    out = _gather_merge(
+        jnp.asarray(stack),
+        jnp.asarray(params[:, :, PARAM_COL_SEED].astype(np.uint32)),
+        jnp.asarray(params[:, :, PARAM_SIGN_SEED].astype(np.uint32)),
+        jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
+        jnp.asarray(ns.astype(np.int32)),
+        jnp.asarray(widths.astype(np.int32)),
+        jnp.asarray(frag_sel), jnp.asarray(keys_pad), kind=kind)
+    # the slice transfers K floats — the only counters-derived bytes that
+    # ever cross the host boundary on this path
+    return np.asarray(out[:n_keys]).astype(np.float64)

@@ -65,6 +65,7 @@ See docs/kernels.md for the full derivation.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -175,9 +176,9 @@ _fleet_update_jit = jax.jit(
 
 
 def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
-                 log2_te: int, signed: bool = True, blk: int = None,
-                 w_blk: int = None, value_mode: str = "auto",
-                 interpret="auto"):
+                 log2_te: int, signed: bool = True,
+                 blk: Optional[int] = None, w_blk: Optional[int] = None,
+                 value_mode: str = "auto", interpret="auto"):
     """Compute all subepoch-record counters for a whole fleet epoch.
 
     Args:
@@ -315,8 +316,8 @@ _fleet_update_ragged_jit = jax.jit(
 def fleet_update_ragged(keys, vals, ts, params, block_frag, *,
                         n_sub_max: int, width_max: int, log2_te: int,
                         signed: bool = True, blk: int = 256,
-                        w_blk: int = None, value_mode: str = "auto",
-                        interpret="auto"):
+                        w_blk: Optional[int] = None,
+                        value_mode: str = "auto", interpret="auto"):
     """Compute all subepoch-record counters for a CSR-packed fleet epoch
     (or epoch window — rows are (epoch, fragment) pairs, see module doc).
 

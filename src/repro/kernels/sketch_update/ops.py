@@ -58,6 +58,7 @@ layouts and the VMEM budget derivation.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -114,7 +115,7 @@ def _sketch_update_jit(keys, vals, ts, *, width: int, n_sub: int,
 def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
                   col_seed: int, sign_seed: int, sub_seed: int,
                   signed: bool = True, backend: str = "pallas",
-                  blk: int = None, w_blk: int = None,
+                  blk: Optional[int] = None, w_blk: Optional[int] = None,
                   value_mode: str = "auto", interpret="auto",
                   check_overflow: bool = True):
     """Compute all subepoch-record counters for one fragment epoch.

@@ -18,7 +18,7 @@ scatter / combine gather.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,7 +64,7 @@ def load_balance_loss(probs, topi, n_experts: int) -> jnp.ndarray:
     return n_experts * jnp.sum(f * p)
 
 
-def moe_ffn(x, p, cfg, capacity_factor: float = None
+def moe_ffn(x, p, cfg, capacity_factor: Optional[float] = None
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Routed-experts FFN.  x: (B, S, D) -> (out, aux_loss).
 

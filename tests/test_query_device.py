@@ -1,0 +1,255 @@
+"""Device-resident query plane parity suite (kernels/sketch_query).
+
+Contract: a ``run_window`` -> ``window_query`` round trip on the fleet
+backend serves queries straight from the still-resident window stack —
+no full counter-stack host transfer, only the ``(K,)`` estimates — and
+the on-device gather/merge (min for CMS, masked median for CS, with and
+without §4.3 path restriction) matches the numpy oracles
+(``query.fleet_query_window`` on the host stacks and
+``query.query_window(merge="fragment")`` on the unpacked records) within
+1e-6 relative on integer-exact counters.
+"""
+import numpy as np
+import pytest
+
+from repro.core import query as Q
+from repro.core.disketch import DiSketchSystem
+from repro.kernels.sketch_query import (KEY_BUCKET_MIN,
+                                        fleet_window_query_device,
+                                        key_bucket)
+from repro.kernels.sketch_update import fleet as FK
+from repro.net.simulator import Replayer
+from repro.net.traffic import cov_list, linear_path_workload
+
+LOG2_TE = 12
+FLEET_KW = dict(blk=256, w_blk=512)
+RTOL = 1e-6
+
+
+def _small_workload(n_hops=5, seed=1, n_epochs=4):
+    rng = np.random.RandomState(seed)
+    widths = np.maximum(cov_list(n_hops, 1280, 1.2, rng).astype(int), 4)
+    mems = {h: int(w) * 4 for h, w in enumerate(widths)}
+    loads = np.maximum(cov_list(n_hops, 30_000, 0.9, rng).astype(int), 16)
+    wl = linear_path_workload(n_hops, eval_flows=100, eval_packets=800,
+                              bg_packets_per_hop=loads, n_epochs=n_epochs,
+                              seed=seed)
+    return wl, Replayer(wl, n_hops), mems
+
+
+def _windowed_system(kind, wl, rep, mems, window=4, **kw):
+    sysw = DiSketchSystem(mems, kind, rho_target=4.0, log2_te=wl.log2_te,
+                          backend="fleet", fleet_kwargs=dict(FLEET_KW, **kw))
+    rep.run(sysw, window=window)
+    return sysw
+
+
+@pytest.mark.parametrize("kind", ["cs", "cms"])
+@pytest.mark.parametrize("path", [None, (2,), (1, 3)])
+def test_device_matches_host_oracle(kind, path):
+    """Device gather/merge == numpy fleet_query_window on the host copy
+    of the same stacks — heterogeneous widths/n_sub (the control loop
+    spreads ns), cms min vs cs masked median, frag_sel on/off."""
+    wl, rep, mems = _small_workload()
+    sysw = _windowed_system(kind, wl, rep, mems)
+    keys = wl.keys[:65]                    # odd size: exercises padding
+    epochs = list(range(wl.n_epochs))
+    # ns actually heterogeneous: the equalization loop must have moved n
+    assert len(set(sysw.ns.values())) > 1 or max(sysw.ns.values()) > 1
+    got = sysw.fleet.window_query(epochs, keys, path=path)
+
+    # no-host-transfer assertion: the window buffer never materialized
+    buf = sysw.fleet._window_bufs[0][0]
+    assert buf._host is None and buf.resident
+
+    # numpy oracle on the *same* counters (forces the transfer now)
+    host = buf.host()
+    frag_sel = None
+    if path is not None:
+        frag_sel = np.array([sw in set(path)
+                             for sw in sysw.fleet.frag_order])
+    ref = Q.fleet_query_window([host[e] for e in epochs],
+                               [sysw.fleet._params_log[e] for e in epochs],
+                               sysw.fleet.widths, keys, kind,
+                               frag_sel=frag_sel)
+    np.testing.assert_allclose(got, ref, rtol=RTOL)
+
+
+@pytest.mark.parametrize("kind", ["cs", "cms"])
+def test_device_matches_record_plane(kind):
+    """Device path == the per-record composite query
+    query_window(merge="fragment") over the materialized WindowRecords
+    (two identical deterministic systems; one stays resident)."""
+    wl, rep, mems = _small_workload()
+    a = _windowed_system(kind, wl, rep, mems, window=2)
+    b = _windowed_system(kind, wl, rep, mems, window=2)
+    keys = wl.keys[:64]
+    epochs = list(range(wl.n_epochs))
+    got = a.fleet.window_query(epochs, keys)
+    assert a.fleet.has_device_window(epochs)
+    recs = [[b.records[e][sw] for sw in sorted(mems)] for e in epochs]
+    ref = Q.query_window(recs, keys, kind, merge="fragment")
+    np.testing.assert_allclose(got, ref, rtol=RTOL)
+
+
+def test_window_query_without_keep_stacked():
+    """Regression (the PR's headline bugfix): window queries work after
+    run_window with the default keep_stacked=False — the counters are
+    alive in the window buffers; requiring keep_stacked both broke the
+    query and forced the transfer window mode exists to avoid."""
+    wl, rep, mems = _small_workload(n_epochs=2)
+    sysw = _windowed_system("cms", wl, rep, mems, window=2)
+    assert not sysw.fleet.keep_stacked and not sysw.fleet.stacked
+    out = sysw.fleet.point_query(1, wl.keys[:16])
+    assert out.shape == (16,)
+    assert sysw.fleet._window_bufs[0][0]._host is None
+    with pytest.raises(KeyError, match="not retained"):
+        sysw.fleet.window_query([99], wl.keys[:4])
+
+
+def test_mixed_device_and_host_epochs():
+    """One window materialized (host path), one still resident (device
+    path): window_query mixes both and matches the all-host answer."""
+    wl, rep, mems = _small_workload()
+    a = _windowed_system("cs", wl, rep, mems, window=2)
+    b = _windowed_system("cs", wl, rep, mems, window=2)
+    keys = wl.keys[:32]
+    epochs = list(range(wl.n_epochs))
+    a.records[0][0]                        # materialize first window only
+    assert not a.fleet._window_bufs[0][0].resident
+    assert a.fleet._window_bufs[2][0].resident
+    got = a.fleet.window_query(epochs, keys)
+    for e in epochs:                       # all-host reference
+        b.records[e][0]
+    ref = b.fleet.window_query(epochs, keys)
+    np.testing.assert_allclose(got, ref, rtol=RTOL)
+
+
+def test_empty_key_batch_and_buckets():
+    wl, rep, mems = _small_workload(n_epochs=2)
+    sysw = _windowed_system("cms", wl, rep, mems, window=2)
+    out = sysw.fleet.window_query([0, 1], np.zeros(0, np.uint32))
+    assert out.shape == (0,)
+    assert sysw.fleet._window_bufs[0][0].resident  # not even touched
+    # key-batch bucketing: pow2 padding, floored, slice back exactly
+    assert key_bucket(0) == key_bucket(1) == KEY_BUCKET_MIN
+    assert key_bucket(9) == 16 and key_bucket(16) == 16
+    a = sysw.fleet.window_query([0, 1], wl.keys[:13])
+    b = sysw.fleet.window_query([0, 1], wl.keys[:16])
+    np.testing.assert_allclose(a, b[:13], rtol=RTOL)
+
+
+def test_query_flows_routes_device():
+    """System plane: query_flows(merge='fragment') answers from the
+    device plane while windows are resident (no transfer), and falls
+    back to the per-record path with identical results after
+    materialization."""
+    wl, rep, mems = _small_workload()
+    sysw = _windowed_system("cms", wl, rep, mems, window=2)
+    keys = wl.keys[:40]
+    paths = [tuple(range(5))] * len(keys)
+    epochs = list(range(wl.n_epochs))
+    assert sysw.fleet.has_device_window(epochs)
+    got = sysw.query_flows(keys, paths, epochs, merge="fragment")
+    assert sysw.fleet._window_bufs[0][0]._host is None   # stayed on device
+    sysw.records[0][0]                                   # materialize
+    assert not sysw.fleet.has_device_window(epochs)
+    ref = sysw.query_flows(keys, paths, epochs, merge="fragment")
+    np.testing.assert_allclose(got, ref, rtol=RTOL)
+
+
+def test_records_for_raises_on_missing_epochs():
+    """Satellite bugfix: a window query over an unprocessed epoch raises
+    (listing the epochs) instead of silently truncating the estimate."""
+    wl, rep, mems = _small_workload(n_epochs=2)
+    sysd = DiSketchSystem(mems, "cms", rho_target=4.0, log2_te=wl.log2_te)
+    rep.run(sysd)
+    keys = wl.keys[:8]
+    paths = [tuple(range(5))] * len(keys)
+    with pytest.raises(KeyError, match=r"\[7\]"):
+        sysd.query_flows(keys, paths, [0, 7])
+    sysd.query_flows(keys, paths, [0, 1])  # processed epochs still fine
+
+
+def test_reprocessed_epoch_invalidates_stale_retention():
+    """Reprocessing an epoch (run_epoch after run_window, or vice versa)
+    must not leave the query plane answering from the previous run's
+    counters under the new run's seeds — stale retention is dropped and
+    queries track the latest processing of each epoch."""
+    from repro.core.disketch import DiscoSystem
+
+    wl, rep, mems = _small_workload(n_epochs=2)
+    # DISCO: n = 1 always, so per-epoch and window runs of the same
+    # epochs are bit-identical — any estimate drift below would come
+    # from stale-state routing, the thing under test.
+    sysd = DiscoSystem(mems, "cms", rho_target=0, log2_te=wl.log2_te,
+                       backend="fleet",
+                       fleet_kwargs=dict(keep_stacked=True, **FLEET_KW))
+    keys = wl.keys[:16]
+    sysd.run_epoch(0, rep.epoch_stream(0))
+    sysd.run_epoch(1, rep.epoch_stream(1))
+    ref = sysd.fleet.window_query([0, 1], keys)
+    sysd.run_window(0, [rep.epoch_stream(0), rep.epoch_stream(1)])
+    assert 0 not in sysd.fleet.stacked          # stale host stack dropped
+    assert sysd.fleet.has_device_window([0, 1])
+    np.testing.assert_allclose(sysd.fleet.window_query([0, 1], keys),
+                               ref, rtol=RTOL)
+    # and the converse: run_epoch drops the window buffer registration
+    sysd.run_epoch(0, rep.epoch_stream(0))
+    assert 0 not in sysd.fleet._window_bufs
+    assert not sysd.fleet.has_device_window([0, 1])
+    np.testing.assert_allclose(sysd.fleet.window_query([0, 1], keys),
+                               ref, rtol=RTOL)
+
+
+def test_engine_rejects_unfrozen_windows():
+    """The device engine's frozen-ns/width precondition is enforced."""
+    params0 = np.zeros((2, FK.N_PARAMS), np.int32)
+    params0[:, FK.PARAM_WIDTH] = 128
+    params0[:, FK.PARAM_N_SUB] = 2
+    params0[:, FK.PARAM_LOG2_N_SUB] = 1
+    params1 = params0.copy()
+    params1[0, FK.PARAM_N_SUB] = 4
+    stack = np.zeros((2, 2, 4, 128), np.float32)
+    with pytest.raises(AssertionError, match="frozen"):
+        fleet_window_query_device(stack, [params0, params1],
+                                  np.arange(4, dtype=np.uint32), "cms")
+
+
+@pytest.mark.parametrize("kind", ["cs", "cms"])
+def test_engine_masked_merge_matches_numpy(kind):
+    """Unit-level: the engine's min / masked-median on a synthetic
+    integer stack equals fleet_query_epoch summed over epochs, for odd
+    and even on-path fragment counts (median midpoint averaging)."""
+    rng = np.random.RandomState(7)
+    e_count, n_frags, n_sub, width = 3, 6, 4, 96
+    stack = rng.randint(-200, 200, (e_count, n_frags, n_sub, width)
+                        ).astype(np.float32)
+    if kind == "cms":
+        stack = np.abs(stack)
+    params = np.zeros((e_count, n_frags, FK.N_PARAMS), np.int32)
+    for e in range(e_count):
+        for f in range(n_frags):
+            params[e, f, FK.PARAM_COL_SEED] = 11 + 31 * e + f
+            params[e, f, FK.PARAM_SIGN_SEED] = 22 + 31 * e + f
+            params[e, f, FK.PARAM_SUB_SEED] = 33 + 31 * e + f
+            params[e, f, FK.PARAM_WIDTH] = width
+            params[e, f, FK.PARAM_N_SUB] = n_sub
+            params[e, f, FK.PARAM_LOG2_N_SUB] = 2
+    keys = rng.randint(0, 1 << 20, 37).astype(np.uint32)
+    widths = np.full(n_frags, width, np.int64)
+    for sel in (None, np.array([1, 0, 1, 1, 0, 1], bool),   # even m
+                np.array([0, 1, 1, 0, 1, 0], bool)):        # odd m
+        got = fleet_window_query_device(stack, list(params), keys, kind,
+                                        frag_sel=sel)
+        ref = sum(Q.fleet_query_epoch(
+            stack[e], params[e, :, FK.PARAM_COL_SEED],
+            params[e, :, FK.PARAM_SIGN_SEED],
+            params[e, :, FK.PARAM_SUB_SEED],
+            params[e, :, FK.PARAM_N_SUB].astype(np.int64), widths, keys,
+            kind, frag_sel=sel) for e in range(e_count))
+        np.testing.assert_allclose(got, ref, rtol=RTOL)
+    # no on-path fragments: defined as zero, no device work
+    zero = fleet_window_query_device(stack, list(params), keys, kind,
+                                     frag_sel=np.zeros(n_frags, bool))
+    np.testing.assert_array_equal(zero, np.zeros(len(keys)))
