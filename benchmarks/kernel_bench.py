@@ -89,6 +89,12 @@ def headline_from_rows(rows, quick: bool = True) -> dict:
             h["query_host_bytes_saved_x"] = max(
                 h.get("query_host_bytes_saved_x", 0),
                 r["host_bytes_saved_x"])
+        elif r.get("bench") == "univmon_fleet":
+            # UnivMon virtual-level-row engine (not gated yet — new
+            # metric, no committed baseline class)
+            h["um_fleet_pkts_per_s"] = r["pkts_per_s"]
+            h["um_fleet_speedup_x"] = r["fleet_speedup_x"]
+            h["um_query_keys_per_s"] = r["level_query_keys_per_s"]
     return h
 
 
@@ -255,7 +261,8 @@ def run(quick: bool = True):
         })
     emit("kernel_bench", [r for r in rows if r["bench"] == "single_kernel"])
     rows = (rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
-            + run_query_plane(quick=quick))
+            + run_query_plane(quick=quick)
+            + run_univmon_fleet(quick=quick))
     headline = headline_from_rows(rows, quick=quick)
     path = write_bench_json(rows, headline)
     print(f"headline: {json.dumps(headline)}")
@@ -581,6 +588,138 @@ def run_query_plane(quick: bool = True):
         })
     emit("kernel_bench_query",
          [r for r in rows if r["bench"] == "query_plane"])
+    return rows
+
+
+def run_univmon_fleet(quick: bool = True):
+    """UnivMon on the fleet: virtual level rows in one batched dispatch
+    vs one ``sketch_update`` per (fragment, level), plus the device
+    all-levels window query vs the per-level host oracle.
+
+    Update side: F heterogeneous um fragments x L levels are F*L param
+    rows driven by ONE CSR stream (packed once per fragment — the level
+    grid axis fans packet blocks out in-kernel), against a loop that
+    dispatches F*L single-row kernels.  ``pkts_per_s`` counts *stream*
+    packets (each implicitly updating all L level rows), so the fleet
+    and loop numbers share a denominator.  Query side: keys/sec through
+    ``um_window_query_device`` (all L levels in one call) vs L per-level
+    passes of the numpy oracle.
+    """
+    import jax
+    from repro.core.disketch import DiSketchSystem, SwitchStream
+    from repro.core.fleet import (build_params, dispatch_ragged_grouped,
+                                  fold_packet_flags, pack_streams)
+    from repro.core import query as Q
+    from repro.kernels.sketch_query import um_window_query_device
+    from repro.kernels.sketch_update import fleet as FK
+
+    rng = np.random.RandomState(5)
+    n_frags = 8 if quick else 16
+    n_levels = 8
+    p = 1 << (11 if quick else 13)
+    log2_te = 16
+    mems = {f: w * 4 * n_levels
+            for f, w in enumerate(([512, 2048, 1024, 4096, 256, 2048,
+                                    512, 1024] * 2)[:n_frags])}
+    streams = {f: SwitchStream(
+        rng.randint(0, 1 << 20, p).astype(np.uint32),
+        np.ones(p, np.int64),
+        rng.randint(0, 1 << log2_te, p).astype(np.int64))
+        for f in range(n_frags)}
+
+    def make(backend):
+        return DiSketchSystem(mems, "um", rho_target=1e9, log2_te=log2_te,
+                              n_levels=n_levels, backend=backend)
+
+    fleet = make("fleet")
+    packet = pack_streams(streams, fleet.fleet.frag_order)
+    fleet.run_epoch(0, streams, packet=packet)
+
+    # loop baseline: the same F*L single-row updates through the
+    # per-row kernel loop (pallas backend, auto geometry, no guard sync)
+    folded = fold_packet_flags(packet, log2_te, n_levels=n_levels,
+                               level_seed=fleet.fleet.level_seed)
+    params = build_params(fleet.fragments, 0, {f: 1 for f in mems},
+                          fleet.fleet.frag_order)
+    dense_keys = folded.keys.reshape(n_frags, p)
+    dense_vals = np.ones((n_frags, p), np.float32)
+    dense_ts = np.asarray(folded.ts).reshape(n_frags, p)
+    kw = dict(n_sub_max=1, width_max=int(fleet.fleet.widths.max()),
+              log2_te=log2_te, signed=True)
+    out_loop = FK.fleet_update_loop(dense_keys, dense_vals, dense_ts,
+                                    params, backend="pallas",
+                                    interpret="auto", check_overflow=False,
+                                    **kw)
+    ok_update = True
+    for i, sw in enumerate(fleet.fleet.frag_order):
+        w = fleet.fragments[sw].width
+        rec = np.asarray(fleet.records[0][sw].counters)       # (L, 1, w)
+        for lev in range(n_levels):
+            ok_update &= np.array_equal(
+                out_loop[i * n_levels + lev, :1, :w], rec[lev])
+
+    # kernel-vs-kernel, like the other *_speedup_x rows: the grouped
+    # ragged engine dispatch against the per-(fragment, level) kernel
+    # loop, both on the pre-folded packet, neither paying host-side
+    # record unpacking or the overflow sync.
+    dispatch_kw = dict(n_levels=n_levels, value_mode="f32",
+                       interpret="auto", **kw)
+    t_fleet = _time_call(lambda: jax.block_until_ready(
+        dispatch_ragged_grouped(params, [folded], **dispatch_kw)))
+    t_loop = _time_call(lambda: FK.fleet_update_loop(
+        dense_keys, dense_vals, dense_ts, params, backend="pallas",
+        interpret="auto", check_overflow=False, **kw))
+
+    # query side: 4-epoch window, all-levels device engine vs the
+    # per-level host oracle on the same (transferred-once) stacks
+    sysw = make("fleet")
+    sysw.run_window(0, [streams] * 4, packets=[packet] * 4)
+    epochs = [0, 1, 2, 3]
+    params_w = [sysw.fleet._params_log[e] for e in epochs]
+    host = [sysw.fleet._window_bufs[0][0].host()[e] for e in epochs]
+    stack4 = np.stack(host).astype(np.float32)
+    rows, best = [], None
+    for n_keys in ((1024, 4096) if quick else (1024, 4096, 16384)):
+        keys = rng.randint(0, 1 << 20, n_keys).astype(np.uint32)
+        got = um_window_query_device(stack4, params_w, keys, n_levels)
+        ref = np.stack([Q.fleet_query_window(
+            host, params_w, sysw.fleet.row_widths, keys, "um",
+            frag_sel=sysw.fleet._row_sel(None, level))
+            for level in range(n_levels)])
+        ok = bool(np.allclose(got, ref, rtol=1e-6))
+        t_dev = _time_call(lambda: um_window_query_device(
+            stack4, params_w, keys, n_levels))
+        t_host = _time_call(lambda: [Q.fleet_query_window(
+            host, params_w, sysw.fleet.row_widths, keys, "um",
+            frag_sel=sysw.fleet._row_sel(None, level))
+            for level in range(n_levels)])
+        # pkts_per_s carries keys/sec here — the schema-2 shared
+        # throughput column, same convention as the query_tune rows
+        row = {"bench": "um_query_tune", "n_keys": n_keys,
+               "query_matches_oracle": ok,
+               "pkts_per_s": round(n_keys / t_dev),
+               "host_keys_per_s": round(n_keys / t_host)}
+        rows.append(row)
+        if ok and (best is None or row["pkts_per_s"] > best["pkts_per_s"]):
+            best = row
+
+    rows.append({
+        "bench": "univmon_fleet",
+        "n_frags": n_frags, "n_levels": n_levels, "pkts_per_frag": p,
+        "fleet_matches_loop": bool(ok_update),
+        "query_matches_oracle": all(
+            r["query_matches_oracle"] for r in rows
+            if r["bench"] == "um_query_tune"),
+        "pkts_per_s": round(n_frags * p / t_fleet),
+        "loop_pkts_per_s": round(n_frags * p / t_loop),
+        "fleet_speedup_x": round(t_loop / t_fleet, 2),
+        "level_query_keys_per_s": 0 if best is None else best["pkts_per_s"],
+        "level_query_host_keys_per_s": (0 if best is None
+                                        else best["host_keys_per_s"]),
+        "device_dispatches_loop": n_frags * n_levels,
+    })
+    emit("kernel_bench_univmon",
+         [r for r in rows if r["bench"] == "univmon_fleet"])
     return rows
 
 

@@ -14,5 +14,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== collection check (all modules, including slow) =="
 python -m pytest -q -m "" --collect-only >/dev/null
 
+echo "== docs check (dead links + api.md quickstart) =="
+python scripts/check_docs.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q

@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Docs gate: dead relative links + the runnable api.md quickstart.
+
+1. Every relative markdown link in docs/*.md and README.md must point at
+   a file (or directory) that exists in the repo — a renamed module or
+   doc silently rots otherwise.
+2. The ``<!-- quickstart -->``-marked python block in docs/api.md must
+   run to completion with PYTHONPATH=src — the API reference's first
+   example is executable documentation, not prose.
+
+Exit non-zero on any failure; CI runs this via scripts/check.sh.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# [text](target) — skip images ![..], absolute URLs, and pure anchors.
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    docs = [os.path.join(REPO, "README.md")]
+    docs_dir = os.path.join(REPO, "docs")
+    for name in sorted(os.listdir(docs_dir)):
+        if name.endswith(".md"):
+            docs.append(os.path.join(docs_dir, name))
+    return docs
+
+
+def check_links() -> list:
+    errors = []
+    for path in doc_files():
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, REPO)
+        with open(path) as f:
+            text = f.read()
+        # fenced code blocks contain sample markdown/code, not links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target_path = target.split("#", 1)[0]
+            if not target_path:
+                continue
+            if not os.path.exists(os.path.join(base, target_path)):
+                errors.append(f"{rel}: dead relative link -> {target}")
+    return errors
+
+
+def extract_quickstart() -> str:
+    path = os.path.join(REPO, "docs", "api.md")
+    with open(path) as f:
+        text = f.read()
+    m = re.search(r"<!--\s*quickstart\s*-->\s*```python\n(.*?)```", text,
+                  flags=re.S)
+    if not m:
+        raise SystemExit("docs/api.md: no <!-- quickstart --> python block")
+    return m.group(1)
+
+
+def run_quickstart() -> int:
+    snippet = extract_quickstart()
+    env = dict(os.environ)
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    with tempfile.NamedTemporaryFile("w", suffix="_quickstart.py",
+                                     delete=False) as f:
+        f.write(snippet)
+        tmp = f.name
+    try:
+        proc = subprocess.run([sys.executable, tmp], env=env, cwd=REPO)
+        return proc.returncode
+    finally:
+        os.unlink(tmp)
+
+
+def main() -> int:
+    errors = check_links()
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    print(f"docs link check: {len(doc_files())} files, "
+          f"{len(errors)} dead links")
+    rc = run_quickstart()
+    if rc != 0:
+        print("FAIL: docs/api.md quickstart snippet exited non-zero",
+              file=sys.stderr)
+    else:
+        print("docs/api.md quickstart: ran clean")
+    return 1 if (errors or rc != 0) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,14 @@ from . import equalize, query, sketches
 from .fragment import EpochRecords, FragmentConfig, process_epoch
 
 
+def _g_entropy(x):
+    """Entropy G-function, jnp-traceable (module-level so the device
+    G-sum jit cache keys on a stable callable)."""
+    import jax.numpy as jnp
+
+    return x * jnp.log2(jnp.maximum(x, 1.0))
+
+
 @dataclass
 class SwitchStream:
     """Packets traversing one switch during one epoch."""
@@ -35,13 +43,13 @@ class DiSketchSystem:
 
     ``backend`` selects the epoch execution engine:
       * ``"loop"`` (default) — per-switch numpy fragments, one
-        ``process_epoch`` per switch (supports every kind + §4.4
-        mitigation);
+        ``process_epoch`` per switch;
       * ``"fleet"`` — one batched Pallas dispatch updates all fragments
-        (``core.fleet.FleetEpochRunner``, ragged CSR layout);
-        bit-identical counters for cs/cms without mitigation.
-        ``fleet_kwargs`` are forwarded to the runner (blk, w_blk,
-        interpret, keep_stacked, layout).
+        (``core.fleet.FleetEpochRunner``, ragged CSR layout) with
+        bit-identical counters for every kind — cs, cms, and UnivMon
+        (levels as virtual fragment rows), with or without §4.4
+        mitigation.  ``fleet_kwargs`` are forwarded to the runner (blk,
+        w_blk, interpret, keep_stacked, layout).
 
     The fleet backend additionally supports *window mode*
     (``run_window`` / ``Replayer.run(system, window=E)``): E consecutive
@@ -184,6 +192,11 @@ class DiSketchSystem:
         vectors cross the host boundary.  Everything else (the default
         subepoch merge, loop backend, materialized windows) goes through
         the per-record composite query over ``self.records``.
+
+        UnivMon frequency estimates come from level 0 (the level that
+        sees the full stream) on both planes; §4.4 mitigation's
+        second-subepoch average applies per path group (single-hop ==
+        path length 1) on both planes too.
         """
         keys = np.asarray(keys, dtype=np.uint32)
         out = np.zeros(len(keys))
@@ -192,36 +205,73 @@ class DiSketchSystem:
             by_path.setdefault(tuple(p), []).append(i)
         device_ok = (merge == "fragment" and self.fleet is not None
                      and self.fleet.has_device_window(epochs))
+        # um frequency estimates come from level 0 (the full-stream
+        # level); the record plane needs level=None for non-um kinds.
+        level = 0 if self.kind == "um" else None
         for path, idxs in by_path.items():
             idxs = np.asarray(idxs)
             if device_ok:
-                # single_hop is irrelevant here: the fleet backend
-                # rejects §4.4 mitigation, the only consumer of it.
-                out[idxs] = self.fleet.window_query(epochs, keys[idxs],
-                                                    path=path)
+                out[idxs] = self.fleet.window_query(
+                    epochs, keys[idxs], path=path, level=0,
+                    single_hop=len(path) == 1)
                 continue
             sh = np.full(len(idxs), len(path) == 1)
             out[idxs] = query.query_window(
                 self._records_for(path, epochs), keys[idxs], self.kind,
-                single_hop=sh, merge=merge)
+                single_hop=sh, level=level, merge=merge)
         return out
 
     def query_entropy(self, keys: np.ndarray,
                       paths: Sequence[Tuple[int, ...]],
                       epochs: Sequence[int], total: float,
                       n_levels: int = 16, level_seed: int = 7777,
-                      k_heavy: int = 1024) -> float:
+                      k_heavy: int = 1024,
+                      merge: str = "subepoch") -> float:
+        """Network-wide empirical entropy from the UnivMon level stack.
+
+        ``merge="fragment"`` selects the §4.2 proportional-scaling
+        fragment merge for the per-level estimates; on the fleet
+        backend with device-resident windows that path runs end-to-end
+        on device — one batched all-levels gather/merge per path group
+        (``FleetEpochRunner.um_level_window_query``) feeding the jitted
+        top-down G-sum combine, with only the per-level estimates and
+        one scalar crossing the host boundary.  The default subepoch
+        merge always goes through the per-record plane.
+        """
         assert self.kind == "um"
         by_path: Dict[Tuple[int, ...], List[int]] = {}
         for i, p in enumerate(paths):
             by_path.setdefault(tuple(p), []).append(i)
         keys = np.asarray(keys, dtype=np.uint32)
+        device_ok = (merge == "fragment" and self.fleet is not None
+                     and self.fleet.has_device_window(epochs)
+                     and n_levels == self.fleet.n_levels
+                     and level_seed == self.fleet.level_seed)
+        if device_ok:
+            from ..kernels.sketch_query import um_gsum_device
+
+            ests, lvls = [], []
+            for path, idxs in by_path.items():
+                ks = keys[np.asarray(idxs)]
+                if not len(ks):
+                    continue
+                ests.append(self.fleet.um_level_window_query(
+                    epochs, ks, path=path))
+                lvls.append(query.H.level_of(ks, level_seed, n_levels))
+            if not ests:
+                return 0.0 if total <= 0 else float(np.log2(total))
+            s = um_gsum_device(np.concatenate(ests, axis=1),
+                               np.concatenate(lvls), _g_entropy,
+                               k_heavy=k_heavy)
+            if total <= 0:
+                return 0.0
+            return float(np.log2(total) - s / total)
         recs, keysets = [], []
         for path, idxs in by_path.items():
             recs.append(self._records_for(path, epochs))
             keysets.append(keys[np.asarray(idxs)])
         return query.um_entropy_window(recs, keysets, n_levels, level_seed,
-                                       total, k_heavy=k_heavy)
+                                       total, k_heavy=k_heavy, merge=merge)
 
 
 def calibrate_rho_target(switch_memories: Dict[int, int], kind: str,

@@ -26,26 +26,34 @@ peak and the per-row PEBs are computed on-device, and the single host
 transfer + int64 conversion + record unpacking happen lazily, once per
 window, on first query-plane access (``WindowRecords``).
 
-Numerical contract: for ``cs``/``cms`` fragments without §4.4 mitigation,
-the fleet path produces bit-identical counters to the per-switch loop
-(same ``frag_seed`` derivation, same hash arithmetic in-kernel) and the
-ragged CSR layout is bit-identical to the PR-1 dense rectangle
+**UnivMon & §4.4 mitigation** run on the fleet too (since PR 5): every
+UnivMon level is a *virtual fragment row* of the parameter table (table
+row ``(e*F + f)*L + l`` carries the level-mixed column/sign seeds and
+its ``PARAM_LEVEL``), the packet stream is still packed once per
+fragment (a level grid axis fans each packet block out in-kernel), and
+the per-key level id / single-hop flag ride the high bits of the packed
+timestamp (``fold_packet_flags``).  See docs/univmon.md for the design
+and exactness argument.
+
+Numerical contract: for every kind — ``cs``, ``cms``, and ``um``, with
+or without §4.4 mitigation — the fleet path produces bit-identical
+counters to the per-switch loop (same ``frag_seed``/``level_seed_mix``
+derivation, same hash arithmetic in-kernel), and the ragged CSR layout
+is bit-identical to the PR-1 dense rectangle on cs/cms
 (``layout="dense"``, kept as an oracle/baseline); validated in
-tests/test_fleet.py.  UnivMon and mitigation stay on the loop backend
-for now (per-level scatter and the second-subepoch mask are not yet
-batched).
+tests/test_fleet.py and tests/test_univmon_fleet.py.
 """
 from __future__ import annotations
 
 from collections.abc import Mapping
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import equalize
 from .fragment import (EpochRecords, FragmentConfig, _ROLE_COL, _ROLE_SIGN,
-                       _ROLE_SUB, frag_seed)
+                       _ROLE_SUB, frag_seed, level_seed_mix)
 
 
 @dataclass
@@ -64,6 +72,7 @@ class FleetPacket:
     ts: np.ndarray             # (P,) int64
     offsets: np.ndarray        # (n_frags + 1,) int64 segment offsets
     frag_order: Tuple[int, ...]
+    single_hop: Optional[np.ndarray] = None  # (P,) bool, §4.4 flag
 
     @property
     def n_frags(self) -> int:
@@ -86,7 +95,9 @@ class FleetPacket:
                                                for lo, hi in segs])])
         return FleetPacket(cat(self.keys), cat(self.values), cat(self.ts),
                            offs.astype(np.int64),
-                           tuple(self.frag_order[i] for i in idx))
+                           tuple(self.frag_order[i] for i in idx),
+                           None if self.single_hop is None
+                           else cat(self.single_hop))
 
     def densify(self, blk: int = 256) -> Tuple[np.ndarray, np.ndarray,
                                                np.ndarray]:
@@ -117,8 +128,16 @@ class FleetPacket:
 
 def pack_streams(streams: Dict[int, "SwitchStream"],
                  frag_order: Sequence[int]) -> FleetPacket:
-    """Concatenate per-switch streams into a fragment-major FleetPacket."""
-    ks, vs, tss, offs = [], [], [], [0]
+    """Concatenate per-switch streams into a fragment-major FleetPacket.
+
+    The §4.4 ``single_hop`` flags ride along when any stream carries
+    them (missing streams contribute all-False segments), so the fleet
+    packer can fold them into the packed timestamps for
+    mitigation-enabled fleets.
+    """
+    ks, vs, tss, shs, offs = [], [], [], [], [0]
+    any_sh = any(st is not None and st.single_hop is not None
+                 for st in streams.values())
     for sw in frag_order:
         st = streams.get(sw)
         n = 0 if st is None else len(st.keys)
@@ -126,11 +145,46 @@ def pack_streams(streams: Dict[int, "SwitchStream"],
             ks.append(np.asarray(st.keys, np.uint32))
             vs.append(np.asarray(st.values, np.int64))
             tss.append(np.asarray(st.ts, np.int64))
+            if any_sh:
+                shs.append(np.zeros(n, bool) if st.single_hop is None
+                           else np.asarray(st.single_hop, bool))
         offs.append(offs[-1] + n)
     cat = (lambda xs, dt: np.concatenate(xs) if xs else np.zeros(0, dt))
     return FleetPacket(cat(ks, np.uint32), cat(vs, np.int64),
                        cat(tss, np.int64), np.asarray(offs, np.int64),
-                       tuple(frag_order))
+                       tuple(frag_order),
+                       cat(shs, bool) if any_sh else None)
+
+
+def fold_packet_flags(packet: FleetPacket, log2_te: int, *,
+                      n_levels: int = 1, level_seed: int = 0,
+                      mitigation: bool = False) -> FleetPacket:
+    """Fold per-packet UnivMon/§4.4 metadata into the high ts bits.
+
+    The batched kernels read only timestamp bits ``[shift, log2_te)``
+    (the Method-2 subepoch bit-slice), so the high bits of the packed
+    uint32 ts word are free side-channels: this masks ts down to its low
+    ``log2_te`` bits and ORs in the key's UnivMon level id (bits
+    ``[LVL_SHIFT, LVL_SHIFT+5)``, computed once per packet with
+    ``hashing.level_of``) and the single-hop flag (bit ``SH_SHIFT``).
+    Returns the input packet unchanged when neither feature is active.
+    Requires ``log2_te <= LVL_SHIFT`` for levels (``<= SH_SHIFT`` for
+    mitigation alone) — enforced by ``FleetEpochRunner``.
+    """
+    from ..kernels.sketch_update.kernel import LVL_SHIFT, SH_SHIFT
+
+    if n_levels <= 1 and not mitigation:
+        return packet
+    ts = np.asarray(packet.ts, np.int64) & ((1 << log2_te) - 1)
+    if n_levels > 1:
+        from . import hashing as H
+
+        lvl = H.level_of(np.asarray(packet.keys, np.uint32), level_seed,
+                         n_levels).astype(np.int64)
+        ts = ts | (lvl << LVL_SHIFT)
+    if mitigation and packet.single_hop is not None:
+        ts = ts | (np.asarray(packet.single_hop, np.int64) << SH_SHIFT)
+    return replace(packet, ts=ts)
 
 
 def _bucket_blocks(nb: int, floor: int = 32) -> int:
@@ -193,23 +247,41 @@ def pack_csr(packets: Sequence[FleetPacket], blk: int = 256,
 def build_params(fragments: Dict[int, FragmentConfig], epoch: int,
                  ns: Dict[int, int],
                  frag_order: Sequence[int]) -> np.ndarray:
-    """Per-fragment int32 parameter table for the fleet kernel."""
+    """Per-row int32 parameter table for the fleet kernel.
+
+    For cs/cms fleets: one row per fragment.  For UnivMon fleets every
+    level is a *virtual fragment row* — fragment ``i`` owns rows
+    ``[i*L, (i+1)*L)``, each carrying the level-mixed column/sign seeds
+    (``level_seed_mix``, the same derivation the loop path and the query
+    plane use) plus its ``PARAM_LEVEL``.  ``PARAM_MIT`` marks §4.4
+    mitigation-enabled rows.
+    """
     from ..kernels.sketch_update import fleet as FK
 
-    params = np.zeros((len(frag_order), FK.N_PARAMS), np.int32)
+    n_levels = max((cfg.n_levels for cfg in fragments.values()
+                    if cfg.kind == "um"), default=1)
+    params = np.zeros((len(frag_order) * n_levels, FK.N_PARAMS), np.int32)
     for i, sw in enumerate(frag_order):
         cfg = fragments[sw]
         n = int(ns[sw])
         assert n & (n - 1) == 0, f"n_sub must be a power of two, got {n}"
-        params[i, FK.PARAM_COL_SEED] = frag_seed(cfg.frag_id, epoch,
-                                                 _ROLE_COL, cfg.base_seed)
-        params[i, FK.PARAM_SIGN_SEED] = frag_seed(cfg.frag_id, epoch,
-                                                  _ROLE_SIGN, cfg.base_seed)
-        params[i, FK.PARAM_SUB_SEED] = frag_seed(cfg.frag_id, epoch,
-                                                 _ROLE_SUB, cfg.base_seed)
-        params[i, FK.PARAM_WIDTH] = cfg.width
-        params[i, FK.PARAM_N_SUB] = n
-        params[i, FK.PARAM_LOG2_N_SUB] = n.bit_length() - 1
+        col = frag_seed(cfg.frag_id, epoch, _ROLE_COL, cfg.base_seed)
+        sgn = frag_seed(cfg.frag_id, epoch, _ROLE_SIGN, cfg.base_seed)
+        sub = frag_seed(cfg.frag_id, epoch, _ROLE_SUB, cfg.base_seed)
+        for lvl in range(n_levels):
+            r = i * n_levels + lvl
+            if cfg.kind == "um":
+                params[r, FK.PARAM_COL_SEED] = level_seed_mix(col, lvl)
+                params[r, FK.PARAM_SIGN_SEED] = level_seed_mix(sgn, lvl)
+            else:
+                params[r, FK.PARAM_COL_SEED] = col
+                params[r, FK.PARAM_SIGN_SEED] = sgn
+            params[r, FK.PARAM_SUB_SEED] = sub
+            params[r, FK.PARAM_WIDTH] = cfg.width
+            params[r, FK.PARAM_N_SUB] = n
+            params[r, FK.PARAM_LOG2_N_SUB] = n.bit_length() - 1
+            params[r, FK.PARAM_LEVEL] = lvl
+            params[r, FK.PARAM_MIT] = int(cfg.mitigation)
     return params
 
 
@@ -218,7 +290,9 @@ def dispatch_ragged_grouped(params: np.ndarray,
                             n_sub_max: int, width_max: int, log2_te: int,
                             signed: bool, blk: int = 256,
                             w_blk: Optional[int] = None,
-                            interpret="auto", value_mode: str = "auto"):
+                            interpret="auto", value_mode: str = "auto",
+                            n_levels: int = 1,
+                            with_mitigation: bool = False):
     """Ragged CSR dispatch with fragments *grouped by subepoch count*.
 
     The kernel's lhs row count is ``n_sub_max * w_blk/LANE`` for every
@@ -232,9 +306,11 @@ def dispatch_ragged_grouped(params: np.ndarray,
     smaller.  Counters are bit-identical to the single-launch path
     (grouping only changes *which* zero rows are materialized).
 
-    ``params`` rows are (epoch, fragment) pairs, epoch-major, with the
-    per-fragment ``n_sub``/``width`` columns identical across epochs
-    (``ns`` frozen — the ``run_window`` contract).  Returns the stacked
+    ``params`` rows are (epoch, fragment[, level]) tuples, epoch-major
+    (``n_levels`` consecutive virtual level rows per fragment for
+    UnivMon fleets), with the per-fragment ``n_sub``/``width`` columns
+    identical across epochs and levels (``ns`` frozen — the
+    ``run_window`` contract).  Returns the stacked
     ``(n_rows, n_sub_max, width_max)`` f32 counters — device-resident on
     TPU (the window path computes PEBs/peaks on-device); assembled in
     host memory on CPU, where "device" scatters would just be extra
@@ -247,28 +323,35 @@ def dispatch_ragged_grouped(params: np.ndarray,
 
     e_count = len(packets)
     n_frags = packets[0].n_frags
+    L = n_levels
     n_rows = params.shape[0]
-    assert n_rows == e_count * n_frags
-    nsub_f = params[:n_frags, FK.PARAM_N_SUB].astype(np.int64)
-    width_f = params[:n_frags, FK.PARAM_WIDTH].astype(np.int64)
-    assert (params[:, FK.PARAM_N_SUB].reshape(e_count, n_frags)
-            == nsub_f).all(), "grouped dispatch requires ns frozen"
+    assert n_rows == e_count * n_frags * L
+    nsub_f = params[:n_frags * L:L, FK.PARAM_N_SUB].astype(np.int64)
+    width_f = params[:n_frags * L:L, FK.PARAM_WIDTH].astype(np.int64)
+    assert (params[:, FK.PARAM_N_SUB].reshape(e_count, n_frags, L)
+            == nsub_f[None, :, None]).all(), \
+        "grouped dispatch requires ns frozen"
     # widths must be frozen too: each group's launch sizes its output to
     # the epoch-0 group width, so a later-epoch growth would silently
     # drop columns >= w_g instead of erroring.
-    assert (params[:, FK.PARAM_WIDTH].reshape(e_count, n_frags)
-            == width_f).all(), "grouped dispatch requires widths frozen"
+    assert (params[:, FK.PARAM_WIDTH].reshape(e_count, n_frags, L)
+            == width_f[None, :, None]).all(), \
+        "grouped dispatch requires widths frozen"
 
     kw = dict(log2_te=log2_te, signed=signed, blk=blk, w_blk=w_blk,
-              interpret=interpret, value_mode=value_mode)
+              interpret=interpret, value_mode=value_mode, n_levels=L,
+              with_mitigation=with_mitigation)
     groups = [np.flatnonzero(nsub_f == n) for n in np.unique(nsub_f)]
     on_device = jax.default_backend() == "tpu"
     out = None
     for frag_idx in groups:
         n_g = int(nsub_f[frag_idx[0]])
         w_g = int(width_f[frag_idx].max(initial=4))
-        rows = (np.arange(e_count)[:, None] * n_frags
-                + frag_idx[None, :]).ravel()
+        # all L level rows of each group fragment, epoch-major — aligned
+        # with the packet rows pack_csr emits for the selected segments
+        rows = ((np.arange(e_count)[:, None] * n_frags
+                 + frag_idx[None, :]).ravel()[:, None] * L
+                + np.arange(L)[None, :]).ravel()
         keys, vals, ts, block_frag = pack_csr(
             [p.select(frag_idx) for p in packets], blk)
         out_g = FK.fleet_update_ragged(
@@ -345,26 +428,31 @@ class WindowRecords(Mapping):
 
     def __init__(self, buf: _WindowBuffer, e_idx: int, epoch: int,
                  fragments: Dict[int, FragmentConfig],
-                 frag_order: Tuple[int, ...], n_arr: np.ndarray):
+                 frag_order: Tuple[int, ...], n_arr: np.ndarray,
+                 n_levels: int = 1):
         self._buf = buf
         self._e = e_idx
         self._epoch = epoch
         self._fragments = fragments
         self._order = frag_order
         self._n = n_arr
+        self._levels = n_levels
         self._recs: Optional[Dict[int, EpochRecords]] = None
 
     def _materialize(self) -> Dict[int, EpochRecords]:
         if self._recs is None:
             stack = self._buf.host()[self._e]
+            L = self._levels
             self._recs = {}
             for i, sw in enumerate(self._order):
                 cfg = self._fragments[sw]
                 n = int(self._n[i])
+                counters = (stack[i * L:(i + 1) * L, :n, :cfg.width]
+                            if cfg.kind == "um"
+                            else stack[i, :n, :cfg.width])
                 self._recs[sw] = EpochRecords(
-                    cfg.frag_id, self._epoch, n,
-                    stack[i, :n, :cfg.width], cfg.kind, cfg.mitigation,
-                    cfg.base_seed)
+                    cfg.frag_id, self._epoch, n, counters, cfg.kind,
+                    cfg.mitigation, cfg.base_seed)
         return self._recs
 
     def __getitem__(self, sw: int) -> EpochRecords:
@@ -403,6 +491,15 @@ class FleetEpochRunner:
     exact bf16/f32 contraction path per dispatch from the packed values
     (all modes are bit-identical — see kernels/sketch_update/kernel.py);
     ``w_blk=None`` defers to ``kernel.select_geometry``.
+
+    UnivMon fleets (``kind="um"``) run every level as a virtual
+    fragment row (homogeneous ``n_levels``/``level_seed`` required;
+    the stacked outputs, ``_params_log`` and the query plane all live
+    in row space — ``n_levels`` rows per fragment), and §4.4
+    mitigation rides a per-row param flag + the folded single-hop ts
+    bit — both bit-identical to the loop backend
+    (tests/test_univmon_fleet.py).  ``layout="dense"`` remains a
+    cs/cms-only oracle.
     """
 
     def __init__(self, fragments: Dict[int, FragmentConfig], log2_te: int,
@@ -410,19 +507,51 @@ class FleetEpochRunner:
                  interpret="auto", keep_stacked: bool = False,
                  layout: str = "ragged", value_mode: str = "auto",
                  group_by_n_sub: bool = True):
+        from ..kernels.sketch_update.kernel import (LVL_FIELD_MASK,
+                                                    LVL_SHIFT, SH_SHIFT)
+
         if layout not in ("ragged", "dense"):
             raise ValueError(f"unknown layout {layout!r}")
         kinds = {cfg.kind for cfg in fragments.values()}
-        if kinds - {"cs", "cms"} or len(kinds) > 1:
+        if kinds - {"cs", "cms", "um"} or len(kinds) > 1:
             raise ValueError(
-                f"fleet backend supports a homogeneous cs or cms fleet, "
-                f"got {sorted(kinds)}; use backend='loop' for UnivMon or "
+                f"fleet backend supports a homogeneous cs, cms or um "
+                f"fleet, got {sorted(kinds)}; use backend='loop' for "
                 "mixed kinds")
-        if any(cfg.mitigation for cfg in fragments.values()):
-            raise ValueError("fleet backend does not support §4.4 "
-                             "mitigation yet; use backend='loop'")
         self.fragments = fragments
         self.kind = next(iter(kinds)) if kinds else "cms"
+        self.mitigation = any(cfg.mitigation for cfg in fragments.values())
+        if self.kind == "um":
+            levels = {cfg.n_levels for cfg in fragments.values()}
+            seeds = {cfg.level_seed for cfg in fragments.values()}
+            if len(levels) > 1 or len(seeds) > 1:
+                raise ValueError(
+                    "fleet backend requires a homogeneous UnivMon fleet "
+                    f"(one n_levels/level_seed), got n_levels={sorted(levels)}"
+                    f", level_seed={sorted(seeds)}")
+            self.n_levels = levels.pop()
+            self.level_seed = seeds.pop()
+            if self.n_levels > LVL_FIELD_MASK + 1:
+                raise ValueError(
+                    f"fleet UnivMon supports n_levels <= "
+                    f"{LVL_FIELD_MASK + 1}, got {self.n_levels}")
+            if log2_te > LVL_SHIFT:
+                raise ValueError(
+                    f"fleet UnivMon requires log2_te <= {LVL_SHIFT} (the "
+                    "level id rides the high ts bits), got "
+                    f"{log2_te}")
+        else:
+            self.n_levels = 1
+            self.level_seed = 0
+        if self.mitigation and log2_te > SH_SHIFT:
+            raise ValueError(
+                f"fleet §4.4 mitigation requires log2_te <= {SH_SHIFT}, "
+                f"got {log2_te}")
+        if layout == "dense" and (self.n_levels > 1 or self.mitigation):
+            raise ValueError(
+                "layout='dense' (the PR-1 oracle rectangle) supports "
+                "cs/cms without mitigation only; use the default "
+                "layout='ragged'")
         self.log2_te = log2_te
         self.blk = blk
         self.w_blk = w_blk
@@ -434,6 +563,12 @@ class FleetEpochRunner:
         self.frag_order: Tuple[int, ...] = tuple(sorted(fragments))
         self.widths = np.array([fragments[sw].width
                                 for sw in self.frag_order], np.int64)
+        # Per-*row* views (n_levels rows per fragment for UnivMon): the
+        # stacked outputs, the params log, and the query plane all
+        # operate in row space.
+        self.row_widths = np.repeat(self.widths, self.n_levels)
+        self.row_levels = np.tile(np.arange(self.n_levels),
+                                  len(self.frag_order))
         self.stacked: Dict[int, np.ndarray] = {}
         self._params_log: Dict[int, np.ndarray] = {}
         # epoch -> (window buffer, epoch index within the window); filled
@@ -452,7 +587,9 @@ class FleetEpochRunner:
     # mass (``_check_input_mass``).
 
     def _check_input_mass(self, packets: Sequence[FleetPacket]) -> None:
-        if self.kind != "cs":
+        # um levels are signed CS rows, each seeing a subset of the
+        # fragment's stream, so the per-fragment mass bound covers them.
+        if self.kind not in ("cs", "um"):
             return
         for packet in packets:
             if not len(packet.values):
@@ -479,8 +616,17 @@ class FleetEpochRunner:
         still-on-device (n_rows, n_sub_max, width_max) f32 stack."""
         from ..kernels.sketch_update import fleet as FK
 
+        # Fold per-packet UnivMon level ids / §4.4 flags into the high
+        # ts bits (no-op for plain cs/cms fleets — the cached epoch
+        # packets are shared across systems and must stay untouched).
+        packets = [fold_packet_flags(p, self.log2_te,
+                                     n_levels=self.n_levels,
+                                     level_seed=self.level_seed,
+                                     mitigation=self.mitigation)
+                   for p in packets]
         kw = dict(n_sub_max=n_sub_max, width_max=width_max,
-                  log2_te=self.log2_te, signed=self.kind == "cs",
+                  log2_te=self.log2_te,
+                  signed=self.kind in ("cs", "um"),
                   blk=self.blk, w_blk=self.w_blk, interpret=self.interpret,
                   value_mode=self.value_mode)
         if self.layout == "dense":
@@ -489,6 +635,7 @@ class FleetEpochRunner:
                                  "window dispatch requires layout='ragged'")
             keys, vals, ts = packets[0].densify(self.blk)
             return FK.fleet_update(keys, vals, ts, params, **kw)
+        kw.update(n_levels=self.n_levels, with_mitigation=self.mitigation)
         if self.group_by_n_sub:
             del kw["n_sub_max"], kw["width_max"]
             return dispatch_ragged_grouped(
@@ -508,8 +655,9 @@ class FleetEpochRunner:
             packet = pack_streams(streams, self.frag_order)
         assert packet.frag_order == self.frag_order
         self._check_input_mass([packet])
+        L = self.n_levels
         params = build_params(self.fragments, epoch, ns, self.frag_order)
-        n_arr = params[:, PARAM_N_SUB].astype(np.int64)
+        n_arr = params[::L, PARAM_N_SUB].astype(np.int64)  # per fragment
         n_sub_max = int(n_arr.max(initial=1))
         width_max = int(self.widths.max(initial=4))
 
@@ -518,15 +666,20 @@ class FleetEpochRunner:
         self._check_output_peak(float(np.abs(stacked_f32).max(initial=0.0)))
         stacked = stacked_f32.astype(np.int64)
 
-        pebs_arr = equalize.peb_fleet(stacked, n_arr, self.widths, self.kind)
+        # §4.2 PEBs come from level 0 for UnivMon (the ::L row slice is
+        # exactly the level-0 rows; a no-op view for cs/cms).
+        pebs_arr = equalize.peb_fleet(stacked[::L], n_arr, self.widths,
+                                      self.kind)
         recs: Dict[int, EpochRecords] = {}
         pebs: Dict[int, float] = {}
         for i, sw in enumerate(self.frag_order):
             cfg = self.fragments[sw]
             n = int(n_arr[i])
+            counters = (stacked[i * L:(i + 1) * L, :n, :cfg.width].copy()
+                        if cfg.kind == "um"
+                        else stacked[i, :n, :cfg.width].copy())
             recs[sw] = EpochRecords(
-                cfg.frag_id, epoch, n,
-                stacked[i, :n, :cfg.width].copy(), cfg.kind,
+                cfg.frag_id, epoch, n, counters, cfg.kind,
                 cfg.mitigation, cfg.base_seed)
             pebs[sw] = float(pebs_arr[i])
         # A reprocessed epoch invalidates any window retention for it:
@@ -565,27 +718,31 @@ class FleetEpochRunner:
             raise ValueError("window dispatch requires layout='ragged'")
         self._check_input_mass(packets)
         n_frags = len(self.frag_order)
+        L = self.n_levels
+        rows_per_epoch = n_frags * L
         params = np.concatenate([
             build_params(self.fragments, epoch0 + e, ns, self.frag_order)
             for e in range(e_count)])
-        n_arr = params[:n_frags, PARAM_N_SUB].astype(np.int64)  # frozen
+        n_arr = params[:rows_per_epoch:L, PARAM_N_SUB].astype(np.int64)
         n_sub_max = int(params[:, PARAM_N_SUB].max(initial=1))
         width_max = int(self.widths.max(initial=4))
 
         out = self._dispatch(params, packets, n_sub_max, width_max)
         self._check_output_peak(
             float(jnp.max(jnp.abs(out))) if out.size else 0.0)
+        # §4.2 PEBs from the level-0 rows (::L is a no-op for cs/cms).
         pebs_all = np.asarray(equalize.peb_fleet_device(
-            out, np.tile(n_arr, e_count), np.tile(self.widths, e_count),
+            out[::L], np.tile(n_arr, e_count), np.tile(self.widths, e_count),
             self.kind)).reshape(e_count, n_frags)
 
-        buf = _WindowBuffer(out, (e_count, n_frags, n_sub_max, width_max))
+        buf = _WindowBuffer(out, (e_count, rows_per_epoch, n_sub_max,
+                                  width_max))
         recs_list: List[WindowRecords] = []
         pebs_list: List[Dict[int, float]] = []
         for e in range(e_count):
             recs_list.append(WindowRecords(buf, e, epoch0 + e,
                                            self.fragments, self.frag_order,
-                                           n_arr))
+                                           n_arr, n_levels=L))
             pebs_list.append({sw: float(pebs_all[e, i])
                               for i, sw in enumerate(self.frag_order)})
             # Point/window queries are served straight from the resident
@@ -596,22 +753,30 @@ class FleetEpochRunner:
             # transfers the buffer first.
             self._window_bufs[epoch0 + e] = (buf, e)
             self._params_log[epoch0 + e] = \
-                params[e * n_frags:(e + 1) * n_frags]
+                params[e * rows_per_epoch:(e + 1) * rows_per_epoch]
             # drop any stale per-epoch retention from a previous run of
             # the same epoch — its counters pair with the OLD seeds
             self.stacked.pop(epoch0 + e, None)
         return recs_list, pebs_list
 
     def point_query(self, epoch: int, keys: np.ndarray,
-                    path: Optional[Sequence[int]] = None) -> np.ndarray:
+                    path: Optional[Sequence[int]] = None,
+                    level: int = 0,
+                    single_hop: bool = False) -> np.ndarray:
         """Batched epoch point-query over the retained stacked counters.
 
         ``path`` restricts the merge to the fragments the queried flows
         traverse (§4.3 Step 1); all queried keys must share the path.
         Omitting it merges every fleet fragment, which is only correct
         when flows traverse all of them (linear-path scenarios).
+        ``level`` selects the UnivMon level row (ignored for cs/cms;
+        level 0 — the full-stream level — answers frequency queries).
+        ``single_hop`` applies the §4.4 second-subepoch average on
+        mitigation-enabled fragments (all queried keys must share it,
+        which they do per path group: single-hop == path length 1).
         """
-        return self.window_query([epoch], keys, path=path)
+        return self.window_query([epoch], keys, path=path, level=level,
+                                 single_hop=single_hop)
 
     def has_device_window(self, epochs: Sequence[int]) -> bool:
         """True when every epoch's window stack is still device-resident,
@@ -631,8 +796,62 @@ class FleetEpochRunner:
             self.stacked[epoch] = stack
         return stack
 
+    def _row_sel(self, path: Optional[Sequence[int]],
+                 level: int) -> Optional[np.ndarray]:
+        """(n_rows_per_epoch,) bool row mask: the §4.3 on-path fragment
+        restriction intersected with the UnivMon level-row selection.
+        None when every row participates (cs/cms, no path)."""
+        if path is None and self.n_levels == 1:
+            return None
+        sel = np.ones(len(self.frag_order) * self.n_levels, bool)
+        if path is not None:
+            on_path = set(path)
+            sel &= np.repeat(np.array([sw in on_path
+                                       for sw in self.frag_order]),
+                             self.n_levels)
+        if self.n_levels > 1:
+            sel &= self.row_levels == level
+        return sel
+
+    def _route_epochs(self, epochs: Sequence[int]):
+        """Partition queried epochs between the device and host query
+        paths — the single source of the retention check, the
+        same-buffer grouping, and the device-side epoch gather, shared
+        by every window-query entry point.
+
+        Returns ``(device_groups, host_epochs)`` where each device
+        group is ``(stack, epochs)`` with ``stack`` the still-resident
+        (possibly epoch-gathered) device array for those epochs.
+        """
+        missing = [e for e in epochs
+                   if e not in self.stacked and e not in self._window_bufs]
+        if missing:
+            raise KeyError(
+                f"epochs {missing} not retained (process them with "
+                "run_window, or construct with keep_stacked=True for "
+                "per-epoch runs)")
+        host_epochs: List[int] = []
+        by_buf: Dict[int, Tuple[_WindowBuffer, List[int]]] = {}
+        for e in epochs:
+            ent = self._window_bufs.get(e)
+            if ent is not None and ent[0].resident:
+                by_buf.setdefault(id(ent[0]), (ent[0], []))[1].append(e)
+            else:
+                host_epochs.append(e)
+        device_groups = []
+        for buf, es in by_buf.values():
+            stack = buf.device()
+            idx = np.array([self._window_bufs[e][1] for e in es], np.int64)
+            if len(idx) != stack.shape[0] \
+                    or (idx != np.arange(len(idx))).any():
+                stack = stack[idx]          # device-side epoch gather
+            device_groups.append((stack, es))
+        return device_groups, host_epochs
+
     def window_query(self, epochs: Sequence[int], keys: np.ndarray,
-                     path: Optional[Sequence[int]] = None) -> np.ndarray:
+                     path: Optional[Sequence[int]] = None,
+                     level: int = 0,
+                     single_hop: bool = False) -> np.ndarray:
         """Batched point-query summed over a query window (O_Q = Sum(O))
         — the fleet twin of ``query.query_window(merge="fragment")``.
 
@@ -646,43 +865,65 @@ class FleetEpochRunner:
         materialized — go through the numpy oracle
         ``query.fleet_query_window``.  The two paths agree within f32
         rounding (a few ULPs) and may be mixed freely in one call.
+
+        For UnivMon fleets ``level`` selects which virtual level rows
+        answer (level 0 = frequency queries); ``single_hop`` enables the
+        §4.4 second-subepoch average on mitigation rows (uniform per
+        call — query_flows passes it per path group).
         """
         from . import query as Q
 
         keys = np.asarray(keys, np.uint32)
-        missing = [e for e in epochs
-                   if e not in self.stacked and e not in self._window_bufs]
-        if missing:
-            raise KeyError(
-                f"epochs {missing} not retained (process them with "
-                "run_window, or construct with keep_stacked=True for "
-                "per-epoch runs)")
-        frag_sel = None
-        if path is not None:
-            on_path = set(path)
-            frag_sel = np.array([sw in on_path for sw in self.frag_order])
-
+        frag_sel = self._row_sel(path, level)
+        device_groups, host_epochs = self._route_epochs(epochs)
         out = np.zeros(len(keys))
-        host_epochs: List[int] = []
-        by_buf: Dict[int, Tuple[_WindowBuffer, List[int]]] = {}
-        for e in epochs:
-            ent = self._window_bufs.get(e)
-            if ent is not None and ent[0].resident:
-                by_buf.setdefault(id(ent[0]), (ent[0], []))[1].append(e)
-            else:
-                host_epochs.append(e)
-        for buf, es in by_buf.values():
-            stack = buf.device()
-            idx = np.array([self._window_bufs[e][1] for e in es], np.int64)
-            if len(idx) != stack.shape[0] \
-                    or (idx != np.arange(len(idx))).any():
-                stack = stack[idx]          # device-side epoch gather
+        for stack, es in device_groups:
             out += Q.fleet_query_window_device(
                 stack, [self._params_log[e] for e in es], keys, self.kind,
-                frag_sel=frag_sel)
+                frag_sel=frag_sel, single_hop=single_hop)
         if host_epochs:
             out += Q.fleet_query_window(
                 [self._host_stack(e) for e in host_epochs],
                 [self._params_log[e] for e in host_epochs],
-                self.widths, keys, self.kind, frag_sel=frag_sel)
+                self.row_widths, keys, self.kind, frag_sel=frag_sel,
+                single_hop=single_hop)
+        return out
+
+    def um_level_window_query(self, epochs: Sequence[int],
+                              keys: np.ndarray,
+                              path: Optional[Sequence[int]] = None,
+                              ) -> np.ndarray:
+        """All ``n_levels`` UnivMon Count-Sketch window estimates for a
+        key batch in one batched call — the per-level inputs of the
+        §6.2 G-sum/entropy estimators.
+
+        Returns ``(n_levels, K)`` float64 ``merge="fragment"`` window
+        estimates (level ``l``'s row is only meaningful for keys with
+        ``level_of(key) >= l`` — the G-sum recursion masks the rest).
+        Device-resident window epochs are answered by one jitted
+        gather/merge over the still-resident stack
+        (``query.um_fleet_query_window_device``); host-materialized
+        epochs fall back to per-level numpy queries.  Both paths mix
+        freely per epoch, as in ``window_query``.
+        """
+        from . import query as Q
+
+        assert self.kind == "um", "um_level_window_query is UnivMon-only"
+        keys = np.asarray(keys, np.uint32)
+        frag_sel = None
+        if path is not None:
+            on_path = set(path)
+            frag_sel = np.array([sw in on_path for sw in self.frag_order])
+        device_groups, host_epochs = self._route_epochs(epochs)
+        out = np.zeros((self.n_levels, len(keys)))
+        for stack, es in device_groups:
+            out += Q.um_fleet_query_window_device(
+                stack, [self._params_log[e] for e in es], keys,
+                self.n_levels, frag_sel=frag_sel)
+        for level in range(self.n_levels) if host_epochs else ():
+            out[level] += Q.fleet_query_window(
+                [self._host_stack(e) for e in host_epochs],
+                [self._params_log[e] for e in host_epochs],
+                self.row_widths, keys, "um",
+                frag_sel=self._row_sel(path, level))
         return out

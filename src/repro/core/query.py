@@ -136,23 +136,32 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
                       sign_seeds: np.ndarray, sub_seeds: np.ndarray,
                       ns: np.ndarray, widths: np.ndarray,
                       keys: np.ndarray, kind: str,
-                      frag_sel: Optional[np.ndarray] = None) -> np.ndarray:
+                      frag_sel: Optional[np.ndarray] = None,
+                      mit: Optional[np.ndarray] = None,
+                      single_hop: bool = False) -> np.ndarray:
     """Batched epoch point-query over a fleet's stacked counters.
 
-    One vectorized pass over the (n_frags, n_sub_max, width_max) block
-    produced by the fleet kernel: every fragment's raw estimate for every
-    key is gathered at once (hashes broadcast over the fragment axis),
-    scaled proportionally to the epoch (x n, §1), and merged across
-    fragments — min of rows for Count-Min, median for Count Sketch.
+    One vectorized pass over the (n_rows, n_sub_max, width_max) block
+    produced by the fleet kernel (rows are fragments, or fragment×level
+    pairs for UnivMon): every row's raw estimate for every key is
+    gathered at once (hashes broadcast over the row axis), scaled
+    proportionally to the epoch (x n, §1), and merged across rows — min
+    for Count-Min, median for Count Sketch / UnivMon levels.
     Semantically identical to ``query_epoch(..., merge="fragment")`` on
     the unpacked per-fragment records (tested in tests/test_fleet.py).
 
-    ``frag_sel`` (bool, (n_frags,)) restricts the merge to the fragments
-    on the queried flows' path — §4.3 Step 1.  Without it, *all* fleet
-    fragments are merged, which is only correct when every queried flow
-    traverses every fragment (e.g. the §6.3 linear-path scenarios):
-    off-path fragments hold near-zero collision values that would bias
-    the min/median toward zero.
+    ``frag_sel`` (bool, (n_rows,)) restricts the merge to the rows on
+    the queried flows' path — §4.3 Step 1 (for UnivMon additionally the
+    queried level's rows).  Without it, *all* rows are merged, which is
+    only correct when every queried flow traverses every fragment (e.g.
+    the §6.3 linear-path scenarios): off-path fragments hold near-zero
+    collision values that would bias the min/median toward zero.
+
+    ``single_hop=True`` applies the §4.4 mitigation average on rows
+    flagged in ``mit``: single-hop flows carry a second subepoch record
+    at ``sub + n/2``, and the two estimates are averaged (all queried
+    keys must share single-hop status, which query_flows guarantees per
+    path group).
     """
     keys = np.asarray(keys, dtype=np.uint32)
     if frag_sel is not None:
@@ -163,6 +172,8 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
         sub_seeds = np.asarray(sub_seeds)[frag_sel]
         ns = np.asarray(ns)[frag_sel]
         widths = np.asarray(widths)[frag_sel]
+        if mit is not None:
+            mit = np.asarray(mit, bool)[frag_sel]
     if len(keys) == 0 or stacked.shape[0] == 0:
         return np.zeros(len(keys))
     ns = np.asarray(ns, np.int64)[:, None]            # (F, 1)
@@ -170,8 +181,13 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
     k2 = keys[None, :]                                # (1, K)
     col = H.hash_mod(k2, np.asarray(col_seeds)[:, None], widths)   # (F, K)
     sub = H.hash_pow2(k2, np.asarray(sub_seeds)[:, None], ns)
-    raw = stacked[np.arange(stacked.shape[0])[:, None], sub,
-                  col].astype(np.float64)
+    rows = np.arange(stacked.shape[0])[:, None]
+    raw = stacked[rows, sub, col].astype(np.float64)
+    if single_hop and mit is not None and mit.any():
+        sub2 = (sub + ns // 2) & (ns - 1)
+        raw2 = stacked[rows, sub2, col].astype(np.float64)
+        use = np.asarray(mit, bool)[:, None] & (ns >= 2)
+        raw = np.where(use, 0.5 * (raw + raw2), raw)
     if kind in ("cs", "um"):
         raw = raw * H.hash_sign(k2, np.asarray(sign_seeds)[:, None]
                                 ).astype(np.float64)
@@ -184,15 +200,17 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
 def fleet_query_window(stacked_by_epoch: Sequence[np.ndarray],
                        params_by_epoch: Sequence[np.ndarray],
                        widths: np.ndarray, keys: np.ndarray, kind: str,
-                       frag_sel: Optional[np.ndarray] = None) -> np.ndarray:
+                       frag_sel: Optional[np.ndarray] = None,
+                       single_hop: bool = False) -> np.ndarray:
     """Window point-query over fleet stacks: O_Q = Sum(O) of per-epoch
     batched queries — the fleet twin of ``query_window`` with
     ``merge="fragment"``.
 
-    ``params_by_epoch`` carries each epoch's ``(n_frags, N_PARAMS)``
+    ``params_by_epoch`` carries each epoch's ``(n_rows, N_PARAMS)``
     fleet parameter table (seeds are per-epoch, so the table differs
     every epoch even for a static fleet); ``frag_sel`` restricts every
-    epoch's merge to the on-path fragments, as in ``fleet_query_epoch``.
+    epoch's merge to the on-path rows, and ``single_hop`` applies the
+    §4.4 average on ``PARAM_MIT`` rows, as in ``fleet_query_epoch``.
     """
     from ..kernels.sketch_update import fleet as FK
 
@@ -205,14 +223,15 @@ def fleet_query_window(stacked_by_epoch: Sequence[np.ndarray],
             sign_seeds=p[:, FK.PARAM_SIGN_SEED].astype(np.int64),
             sub_seeds=p[:, FK.PARAM_SUB_SEED].astype(np.int64),
             ns=p[:, FK.PARAM_N_SUB].astype(np.int64),
-            widths=widths, keys=keys, kind=kind, frag_sel=frag_sel)
+            widths=widths, keys=keys, kind=kind, frag_sel=frag_sel,
+            mit=p[:, FK.PARAM_MIT] != 0, single_hop=single_hop)
     return out
 
 
 def fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
                               kind: str,
                               frag_sel: Optional[np.ndarray] = None,
-                              ) -> np.ndarray:
+                              single_hop: bool = False) -> np.ndarray:
     """Device-side twin of ``fleet_query_window``: the same §4.3
     fragment-merge window query, run where the stacked counters already
     live so only the ``(K,)`` estimate vector crosses the host boundary.
@@ -224,7 +243,22 @@ def fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
     from ..kernels.sketch_query import fleet_window_query_device
 
     return fleet_window_query_device(stack, params_by_epoch, keys, kind,
-                                     frag_sel=frag_sel)
+                                     frag_sel=frag_sel,
+                                     single_hop=single_hop)
+
+
+def um_fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
+                                 n_levels: int,
+                                 frag_sel: Optional[np.ndarray] = None,
+                                 ) -> np.ndarray:
+    """All ``n_levels`` UnivMon window estimates in one device call —
+    thin re-export of ``repro.kernels.sketch_query.um_window_query_device``
+    (the §6.2 per-level inputs; see ``FleetEpochRunner
+    .um_level_window_query`` for the routed entry point)."""
+    from ..kernels.sketch_query import um_window_query_device
+
+    return um_window_query_device(stack, params_by_epoch, keys, n_levels,
+                                  frag_sel=frag_sel)
 
 
 def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],
@@ -252,38 +286,15 @@ def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],
 # ---------------------------------------------------------------------------
 
 
-def um_gsum_window(records_by_epoch_per_path, keys_per_path, g,
-                   n_levels: int, level_seed: int,
-                   k_heavy: int = 1024) -> float:
-    """Recursive UnivMon estimator over disaggregated composite sketches.
-
-    ``records_by_epoch_per_path``: list (one entry per path-group) of
-    per-epoch record lists; ``keys_per_path``: the candidate keys of each
-    group.  Per-level window frequencies are estimated with the standard
-    composite query, then combined with the UnivMon Y-recursion.
-    """
-    # Estimate per-level window frequency for every candidate key.
-    all_keys, all_lvl, est_per_level = [], [], []
-    for keys, recs_by_epoch in zip(keys_per_path, records_by_epoch_per_path):
-        keys = np.asarray(keys, dtype=np.uint32)
-        if len(keys) == 0:
-            continue
-        lvl = H.level_of(keys, level_seed, n_levels)
-        ests = np.zeros((n_levels, len(keys)))
-        for l in range(n_levels):
-            m = lvl >= l
-            if not m.any():
-                continue
-            ests[l, m] = query_window(recs_by_epoch, keys[m], "um", level=l)
-        all_keys.append(keys)
-        all_lvl.append(lvl)
-        est_per_level.append(ests)
-    if not all_keys:
-        return 0.0
-    keys = np.concatenate(all_keys)
-    lvl = np.concatenate(all_lvl)
-    ests = np.concatenate(est_per_level, axis=1)
-
+def um_gsum_combine(ests: np.ndarray, lvl: np.ndarray, g,
+                    k_heavy: int = 1024) -> float:
+    """The UnivMon top-down Y-recursion over precomputed per-level
+    window estimates (``ests``: (n_levels, K); ``lvl``: (K,) level
+    membership).  Shared tail of the host and device estimator paths —
+    the device plane produces ``ests`` with one batched gather/merge
+    (``um_fleet_query_window_device``) and can also run this combine
+    on-device (``kernels.sketch_query.um_gsum_device``)."""
+    n_levels = ests.shape[0]
     y = 0.0
     for l in range(n_levels - 1, -1, -1):
         sel = lvl >= l
@@ -301,13 +312,50 @@ def um_gsum_window(records_by_epoch_per_path, keys_per_path, g,
     return y
 
 
+def um_gsum_window(records_by_epoch_per_path, keys_per_path, g,
+                   n_levels: int, level_seed: int,
+                   k_heavy: int = 1024, merge: str = "subepoch") -> float:
+    """Recursive UnivMon estimator over disaggregated composite sketches.
+
+    ``records_by_epoch_per_path``: list (one entry per path-group) of
+    per-epoch record lists; ``keys_per_path``: the candidate keys of each
+    group.  Per-level window frequencies are estimated with the standard
+    composite query (``merge`` selects the §4.3 subepoch merge or the
+    fragment merge — the latter is what the device query plane computes),
+    then combined with the UnivMon Y-recursion.
+    """
+    # Estimate per-level window frequency for every candidate key.
+    all_keys, all_lvl, est_per_level = [], [], []
+    for keys, recs_by_epoch in zip(keys_per_path, records_by_epoch_per_path):
+        keys = np.asarray(keys, dtype=np.uint32)
+        if len(keys) == 0:
+            continue
+        lvl = H.level_of(keys, level_seed, n_levels)
+        ests = np.zeros((n_levels, len(keys)))
+        for l in range(n_levels):
+            m = lvl >= l
+            if not m.any():
+                continue
+            ests[l, m] = query_window(recs_by_epoch, keys[m], "um", level=l,
+                                      merge=merge)
+        all_keys.append(keys)
+        all_lvl.append(lvl)
+        est_per_level.append(ests)
+    if not all_keys:
+        return 0.0
+    lvl = np.concatenate(all_lvl)
+    ests = np.concatenate(est_per_level, axis=1)
+    return um_gsum_combine(ests, lvl, g, k_heavy=k_heavy)
+
+
 def um_entropy_window(records_by_epoch_per_path, keys_per_path,
                       n_levels: int, level_seed: int, total: float,
-                      k_heavy: int = 1024) -> float:
+                      k_heavy: int = 1024,
+                      merge: str = "subepoch") -> float:
     """Empirical entropy in bits over the query window."""
     s = um_gsum_window(records_by_epoch_per_path, keys_per_path,
                        lambda x: x * np.log2(np.maximum(x, 1.0)),
-                       n_levels, level_seed, k_heavy=k_heavy)
+                       n_levels, level_seed, k_heavy=k_heavy, merge=merge)
     if total <= 0:
         return 0.0
     return float(np.log2(total) - s / total)

@@ -40,6 +40,15 @@ within a few ULPs (<< 1e-6 relative), which is the documented contract.
 
 Key batches are padded to power-of-two buckets so a replay's varying
 query sizes trigger O(log K) compiles instead of one per batch size.
+
+UnivMon rides the same engine: the window stack's rows are virtual
+(fragment, level) pairs whose per-level mixed seeds were baked into the
+parameter table at build time, so ``fleet_window_query_device`` with a
+level-row selection answers level-l (e.g. frequency = level-0) queries
+unchanged, ``um_window_query_device`` answers ALL levels in one batched
+gather/merge (the §6.2 G-sum inputs), and ``um_gsum_device`` runs the
+top-down Y-recursion next to them.  §4.4 mitigation is a second gather
+at ``sub + n/2`` averaged on PARAM_MIT rows (``single_hop=True``).
 """
 from __future__ import annotations
 
@@ -51,7 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core import hashing as H
-from ..sketch_update.fleet import (PARAM_COL_SEED, PARAM_N_SUB,
+from ..sketch_update.fleet import (PARAM_COL_SEED, PARAM_MIT, PARAM_N_SUB,
                                    PARAM_SIGN_SEED, PARAM_SUB_SEED,
                                    PARAM_WIDTH)
 
@@ -65,65 +74,108 @@ def key_bucket(n_keys: int) -> int:
     return max(KEY_BUCKET_MIN, 1 << max(int(n_keys) - 1, 0).bit_length())
 
 
-@functools.partial(jax.jit, static_argnames=("kind",))
-def _gather_merge(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
-                  frag_sel, keys, *, kind: str):
-    """Fused device pass: (E, F, S, W) stack + (K,) keys -> (K,) window
-    estimates.
-
-    ``col_seeds``/``sign_seeds``/``sub_seeds`` are (E, F) uint32 (seeds
-    are per-epoch); ``ns``/``widths`` are (F,) int32 (frozen across the
-    window — the ``run_window`` contract); ``frag_sel`` is (F,) bool.
-    Passing the selection as data (rather than slicing fragments out)
-    keeps the compiled shape independent of the queried path.
-    """
-    e_count, n_frags = stack.shape[:2]
+def _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+                mit_rows, keys, *, signed: bool, mitigate: bool):
+    """Shared gather: (E, R, S, W) stack + (K,) keys -> (E, R, K) raw
+    per-row estimates (signed, §4.4-averaged, x n scaled)."""
+    e_count, n_rows = stack.shape[:2]
     k = keys[None, None, :]                               # (1, 1, K)
     col = H.hash_mod(k, col_seeds[:, :, None], widths[None, :, None],
-                     xp=jnp)                              # (E, F, K)
+                     xp=jnp)                              # (E, R, K)
     sub = H.hash_pow2(k, sub_seeds[:, :, None], ns[None, :, None], xp=jnp)
-    raw = stack[jnp.arange(e_count)[:, None, None],
-                jnp.arange(n_frags)[None, :, None], sub, col]  # (E, F, K)
-    if kind in ("cs", "um"):
+    e_idx = jnp.arange(e_count)[:, None, None]
+    r_idx = jnp.arange(n_rows)[None, :, None]
+    raw = stack[e_idx, r_idx, sub, col]                   # (E, R, K)
+    if mitigate:
+        # §4.4: single-hop flows carry a second subepoch record at
+        # sub + n/2 on mitigation rows; average the two (counters are
+        # exact f32 integers, so the /2 midpoint is within the same
+        # rounding contract as the CS median midpoint).
+        sub2 = (sub + (ns[None, :, None] >> 1)) & (ns[None, :, None] - 1)
+        raw2 = stack[e_idx, r_idx, sub2, col]
+        use = (mit_rows & (ns >= 2))[None, :, None]
+        raw = jnp.where(use, 0.5 * (raw + raw2), raw)
+    if signed:
         raw = raw * H.hash_sign(k, sign_seeds[:, :, None],
                                 xp=jnp).astype(jnp.float32)
     # Proportional scaling to the epoch (x n, §1): n is a power of two,
     # so the product stays exact in f32.
-    raw = raw * ns[None, :, None].astype(jnp.float32)
+    return raw * ns[None, :, None].astype(jnp.float32)
+
+
+def _masked_merge(raw, frag_sel, *, kind: str):
+    """§4.3 merge across the row axis (axis 1) with the on-path
+    selection passed as data: min for CMS, masked median otherwise."""
     masked = jnp.where(frag_sel[None, :, None], raw, jnp.inf)
     if kind == "cms":
-        per_epoch = jnp.min(masked, axis=1)               # (E, K)
-    else:
-        # Masked median: +inf-masked entries sort to the top, so ranks
-        # (m-1)//2 and m//2 of the ascending sort are the two middle
-        # *selected* values (m = number of on-path fragments).
-        srt = jnp.sort(masked, axis=1)
-        m = jnp.sum(frag_sel).astype(jnp.int32)
-        shape = (e_count, 1, srt.shape[2])
-        lo = jnp.take_along_axis(srt, jnp.broadcast_to((m - 1) // 2, shape),
-                                 axis=1)
-        hi = jnp.take_along_axis(srt, jnp.broadcast_to(m // 2, shape),
-                                 axis=1)
-        per_epoch = (0.5 * (lo + hi))[:, 0, :]
-    return per_epoch.sum(axis=0)                          # (K,)
+        return jnp.min(masked, axis=1)                    # (E, K)
+    # Masked median: +inf-masked entries sort to the top, so ranks
+    # (m-1)//2 and m//2 of the ascending sort are the two middle
+    # *selected* values (m = number of on-path rows).
+    srt = jnp.sort(masked, axis=1)
+    m = jnp.sum(frag_sel).astype(jnp.int32)
+    shape = (srt.shape[0], 1, srt.shape[2])
+    lo = jnp.take_along_axis(srt, jnp.broadcast_to((m - 1) // 2, shape),
+                             axis=1)
+    hi = jnp.take_along_axis(srt, jnp.broadcast_to(m // 2, shape),
+                             axis=1)
+    return (0.5 * (lo + hi))[:, 0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "mitigate"))
+def _gather_merge(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+                  frag_sel, mit_rows, keys, *, kind: str, mitigate: bool):
+    """Fused device pass: (E, R, S, W) stack + (K,) keys -> (K,) window
+    estimates (R = fleet rows; fragments, or fragment×level pairs).
+
+    ``col_seeds``/``sign_seeds``/``sub_seeds`` are (E, R) uint32 (seeds
+    are per-epoch); ``ns``/``widths`` are (R,) int32 (frozen across the
+    window — the ``run_window`` contract); ``frag_sel``/``mit_rows`` are
+    (R,) bool.  Passing the selection as data (rather than slicing rows
+    out) keeps the compiled shape independent of the queried path.
+    """
+    raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+                      mit_rows, keys, signed=kind in ("cs", "um"),
+                      mitigate=mitigate)
+    return _masked_merge(raw, frag_sel, kind=kind).sum(axis=0)  # (K,)
+
+
+def _prep_window_params(stack, params_by_epoch):
+    """Stack + frozen-ns validation shared by the window-query entry
+    points.  Returns (params (E, R, N_PARAMS), ns, widths)."""
+    params = np.stack([np.asarray(p, np.int32) for p in params_by_epoch])
+    e_count, n_rows = params.shape[:2]
+    assert tuple(stack.shape[:2]) == (e_count, n_rows), \
+        f"stack {stack.shape} does not match params ({e_count}, {n_rows})"
+    ns = params[0, :, PARAM_N_SUB]
+    widths = params[0, :, PARAM_WIDTH]
+    assert (params[:, :, PARAM_N_SUB] == ns).all() and \
+        (params[:, :, PARAM_WIDTH] == widths).all(), \
+        "device window query requires ns/widths frozen across the window"
+    return params, ns, widths
 
 
 def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
                               keys: np.ndarray, kind: str,
                               frag_sel: Optional[np.ndarray] = None,
-                              ) -> np.ndarray:
+                              single_hop: bool = False) -> np.ndarray:
     """Batched window point-query on a still-resident window stack.
 
     Args:
-      stack: ``(E, F, n_sub_max, width_max)`` f32 counter stack — a
+      stack: ``(E, R, n_sub_max, width_max)`` f32 counter stack — a
         device array on TPU (the point: it never transfers), any
-        jnp-compatible array on CPU.
-      params_by_epoch: E host ``(F, N_PARAMS)`` int32 fleet parameter
+        jnp-compatible array on CPU.  R is the fleet's row count
+        (fragments; fragment×level pairs for UnivMon).
+      params_by_epoch: E host ``(R, N_PARAMS)`` int32 fleet parameter
         tables (seeds differ per epoch; ``n_sub``/``width`` columns must
         be frozen across the window, as ``run_window`` guarantees).
       keys: (K,) uint32 key batch.
-      kind: "cs" | "cms".
-      frag_sel: optional (F,) bool on-path fragment mask (§4.3 Step 1).
+      kind: "cs" | "cms" | "um" (um rows are signed CS levels; pass the
+        queried level's rows via ``frag_sel``).
+      frag_sel: optional (R,) bool on-path row mask (§4.3 Step 1).
+      single_hop: apply the §4.4 second-subepoch average on PARAM_MIT
+        rows (the queried flows are single-hop — uniform per path
+        group).
 
     Returns the (K,) float64 window estimates — numerically within a few
     f32 ULPs of ``repro.core.query.fleet_query_window`` on the host copy
@@ -131,20 +183,15 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     """
     keys = np.asarray(keys, dtype=np.uint32)
     n_keys = len(keys)
-    params = np.stack([np.asarray(p, np.int32) for p in params_by_epoch])
-    e_count, n_frags = params.shape[:2]
-    assert tuple(stack.shape[:2]) == (e_count, n_frags), \
-        f"stack {stack.shape} does not match params ({e_count}, {n_frags})"
-    ns = params[0, :, PARAM_N_SUB]
-    widths = params[0, :, PARAM_WIDTH]
-    assert (params[:, :, PARAM_N_SUB] == ns).all() and \
-        (params[:, :, PARAM_WIDTH] == widths).all(), \
-        "device window query requires ns/widths frozen across the window"
+    params, ns, widths = _prep_window_params(stack, params_by_epoch)
+    n_rows = params.shape[1]
     if frag_sel is None:
-        frag_sel = np.ones(n_frags, bool)
+        frag_sel = np.ones(n_rows, bool)
     frag_sel = np.asarray(frag_sel, bool)
-    if n_keys == 0 or n_frags == 0 or not frag_sel.any():
+    if n_keys == 0 or n_rows == 0 or not frag_sel.any():
         return np.zeros(n_keys)
+    mit_rows = params[0, :, PARAM_MIT] != 0
+    mitigate = bool(single_hop) and bool(mit_rows.any())
     kb = key_bucket(n_keys)
     keys_pad = np.zeros(kb, np.uint32)
     keys_pad[:n_keys] = keys
@@ -155,7 +202,129 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
         jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
         jnp.asarray(ns.astype(np.int32)),
         jnp.asarray(widths.astype(np.int32)),
-        jnp.asarray(frag_sel), jnp.asarray(keys_pad), kind=kind)
+        jnp.asarray(frag_sel), jnp.asarray(mit_rows),
+        jnp.asarray(keys_pad), kind=kind, mitigate=mitigate)
     # the slice transfers K floats — the only counters-derived bytes that
     # ever cross the host boundary on this path
     return np.asarray(out[:n_keys]).astype(np.float64)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels",))
+def _gather_merge_um(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+                     frag_sel, keys, *, n_levels: int):
+    """All-levels UnivMon pass: (E, F*L, S, W) stack + (K,) keys ->
+    (L, K) per-level window estimates.
+
+    One gather covers every (epoch, fragment, level) row at once —
+    the per-level seed mixing already happened at param-build time
+    (``core.fleet.build_params``), so each virtual row's seeds are just
+    its table entries.  The §4.3 masked median then merges the
+    *fragment* axis independently per level (``frag_sel`` is the (F,)
+    on-path mask), and the window sum is O_Q = Sum(O) per level.
+    """
+    e_count, n_rows = stack.shape[:2]
+    n_frags = n_rows // n_levels
+    raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+                      None, keys, signed=True, mitigate=False)
+    # (E, F, L, K) -> merge over fragments per level: move L into the
+    # epoch axis so the shared (axis-1) masked median applies unchanged.
+    raw = (raw.reshape(e_count, n_frags, n_levels, -1)
+           .transpose(0, 2, 1, 3)
+           .reshape(e_count * n_levels, n_frags, -1))
+    merged = _masked_merge(raw, frag_sel, kind="um")      # (E*L, K)
+    return merged.reshape(e_count, n_levels, -1).sum(axis=0)  # (L, K)
+
+
+def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
+                           keys: np.ndarray, n_levels: int,
+                           frag_sel: Optional[np.ndarray] = None,
+                           ) -> np.ndarray:
+    """All ``n_levels`` UnivMon Count-Sketch window estimates for a key
+    batch in ONE batched device call (the §6.2 G-sum inputs).
+
+    Args:
+      stack: ``(E, F * n_levels, n_sub_max, width_max)`` still-resident
+        window stack (virtual level rows, fragment-major).
+      params_by_epoch: E host ``(F * n_levels, N_PARAMS)`` tables with
+        per-level mixed seeds (``core.fleet.build_params``).
+      keys: (K,) uint32 key batch.
+      frag_sel: optional (F,) bool on-path *fragment* mask — the level
+        selection is structural here, not a mask.
+
+    Returns (n_levels, K) float64 ``merge="fragment"`` window estimates;
+    level ``l``'s row is meaningful for keys with ``level_of >= l`` (the
+    G-sum recursion masks the rest).  Mitigation averaging is not
+    applied — the G-sum path queries without single-hop records, exactly
+    like the host ``um_gsum_window``.
+    """
+    keys = np.asarray(keys, dtype=np.uint32)
+    n_keys = len(keys)
+    params, ns, widths = _prep_window_params(stack, params_by_epoch)
+    n_rows = params.shape[1]
+    assert n_rows % n_levels == 0
+    n_frags = n_rows // n_levels
+    if frag_sel is None:
+        frag_sel = np.ones(n_frags, bool)
+    frag_sel = np.asarray(frag_sel, bool)
+    if n_keys == 0 or n_frags == 0 or not frag_sel.any():
+        return np.zeros((n_levels, n_keys))
+    kb = key_bucket(n_keys)
+    keys_pad = np.zeros(kb, np.uint32)
+    keys_pad[:n_keys] = keys
+    out = _gather_merge_um(
+        jnp.asarray(stack),
+        jnp.asarray(params[:, :, PARAM_COL_SEED].astype(np.uint32)),
+        jnp.asarray(params[:, :, PARAM_SIGN_SEED].astype(np.uint32)),
+        jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
+        jnp.asarray(ns.astype(np.int32)),
+        jnp.asarray(widths.astype(np.int32)),
+        jnp.asarray(frag_sel), jnp.asarray(keys_pad), n_levels=n_levels)
+    # (L, K) floats across the boundary — still no counter-stack bytes
+    return np.asarray(out[:, :n_keys]).astype(np.float64)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "k_heavy", "n_levels"))
+def _um_gsum_jit(ests, lvl, *, g, k_heavy: int, n_levels: int):
+    """Top-down UnivMon Y-recursion on device (mirrors
+    ``core.query.um_gsum_combine``; the level loop is unrolled — L is
+    small and static)."""
+    y = jnp.float32(0.0)
+    for l in range(n_levels - 1, -1, -1):
+        sel = lvl >= l
+        est = jnp.where(sel, jnp.maximum(ests[l], 1.0), -jnp.inf)
+        vals, idx = jax.lax.top_k(est, min(k_heavy, est.shape[0]))
+        valid = vals > -jnp.inf
+        gv = jnp.where(valid, g(jnp.where(valid, vals, 1.0)), 0.0)
+        if l == n_levels - 1:
+            y = gv.sum()
+        else:
+            in_next = ((lvl[idx] >= l + 1) & valid).astype(jnp.float32)
+            y = 2.0 * y + jnp.sum((1.0 - 2.0 * in_next) * gv)
+    return y
+
+
+def um_gsum_device(ests: np.ndarray, lvl: np.ndarray, g,
+                   k_heavy: int = 1024) -> float:
+    """Device twin of ``core.query.um_gsum_combine``: the recursive
+    G-sum estimator over precomputed (n_levels, K) per-level estimates.
+
+    ``g`` must be a jnp-traceable callable (hashable — e.g. a module
+    -level function, so the jit cache keys on it).  Accumulates in f32
+    (jax's default; the host combine runs in f64), so expect ~1e-5
+    relative agreement; additionally, with a *binding* top-k cutoff
+    (``k_heavy < K``) the two may select different keys among exact
+    ties (documented in docs/univmon.md).
+    """
+    ests = np.asarray(ests, np.float32)
+    lvl = np.asarray(lvl, np.int32)
+    n_levels, n_keys = ests.shape
+    # Same O(log K) compile discipline as the query entry points: pad
+    # the key axis to a pow2 bucket with lvl = -1 sentinels, which no
+    # level ever selects (sel = lvl >= l with l >= 0).
+    kb = key_bucket(n_keys)
+    if kb != n_keys:
+        ests = np.pad(ests, ((0, 0), (0, kb - n_keys)))
+        lvl = np.pad(lvl, (0, kb - n_keys), constant_values=-1)
+    return float(_um_gsum_jit(jnp.asarray(ests), jnp.asarray(lvl), g=g,
+                              k_heavy=int(k_heavy),
+                              n_levels=int(n_levels)))

@@ -29,6 +29,25 @@ the table, E epochs x F fragments are simply E*F rows: the *epoch-window
 super-dispatch* reuses this kernel unchanged with virtual rows
 ``e * n_frags + f`` (see ``repro.core.fleet.FleetEpochRunner.run_window``).
 
+**UnivMon virtual level rows (``n_levels > 1``).**  A UnivMon fragment
+is ``n_levels`` independent Count-Sketch rows sharing the fragment's
+subepoch hash, with level ``l`` seeing only keys whose level hash gives
+``level_of(key) >= l``.  On the fleet each (row, level) pair is a
+*virtual param row* — table row ``r * n_levels + l`` carries the
+level-mixed column/sign seeds (``fragment.level_seed_mix``, applied at
+param-build time) plus the row's ``PARAM_LEVEL`` — while the packet
+stream is packed ONCE per fragment: the grid grows a leading level axis
+(``grid = (n_levels, width_blocks, packet_blocks_total)``) that fans
+every packet block out to its fragment's L counter tiles, and the §4.1
+monitored mask is extended in-kernel by the per-packet level id the
+host packer folded into the high ts bits
+(``repro.core.fleet.fold_packet_flags`` — layout in kernel.py).  The
+§4.4 single-hop mitigation rides the same mechanism: ``PARAM_MIT`` rows
+additionally monitor packets flagged in ts bit 31 during the flow's
+second subepoch.  ``n_levels = 1`` (cs/cms) keeps the exact PR-2/3
+behavior — the level axis has extent 1 and the extra mask terms are
+statically compiled out unless ``with_mitigation`` is set.
+
 **Dense rectangle (``fleet_update``, kept as oracle/baseline).**  The
 PR-1 layout: packets packed into a ``(n_frags, p_max)`` rectangle with
 ``grid = (n_frags, width_blocks, packet_blocks)``; every fragment pays
@@ -73,9 +92,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .kernel import (LANE, block_contrib, pow2_width_cap,
-                     resolve_interpret, resolve_value_mode,
-                     select_geometry)
+from .kernel import (LANE, LVL_FIELD_MASK, LVL_SHIFT, block_contrib,
+                     pow2_width_cap, resolve_interpret,
+                     resolve_value_mode, select_geometry)
 
 # Columns of the per-fragment int32 parameter table.
 PARAM_COL_SEED = 0
@@ -84,13 +103,18 @@ PARAM_SUB_SEED = 2
 PARAM_WIDTH = 3
 PARAM_N_SUB = 4
 PARAM_LOG2_N_SUB = 5
-N_PARAMS = 8  # padded to 8 for alignment
+PARAM_LEVEL = 6   # UnivMon virtual level row id (0 for cs/cms)
+PARAM_MIT = 7     # §4.4 single-hop mitigation enabled for this row
+N_PARAMS = 8
 
 
 def _frag_contrib(params, keys, vals, ts, *, wi, w_blk, n_sub_max,
-                  log2_te, signed, value_mode):
+                  log2_te, signed, value_mode, with_levels=False,
+                  with_mitigation=False):
     """One fragment's packet-block contribution, parameters from its
-    table row."""
+    table row.  ``with_levels``/``with_mitigation`` (static) gate the
+    extended monitored-mask terms so cs/cms fleets compile the exact
+    pre-UnivMon kernel body."""
     return block_contrib(
         keys.astype(jnp.uint32), vals, ts.astype(jnp.uint32),
         col_seed=params[PARAM_COL_SEED].astype(jnp.uint32),
@@ -101,7 +125,9 @@ def _frag_contrib(params, keys, vals, ts, *, wi, w_blk, n_sub_max,
         shift=(jnp.uint32(log2_te)
                - params[PARAM_LOG2_N_SUB].astype(jnp.uint32)),
         wi=wi, w_blk=w_blk, n_sub_rows=n_sub_max, signed=signed,
-        value_mode=value_mode)
+        value_mode=value_mode,
+        level=params[PARAM_LEVEL] if with_levels else 0,
+        mit=params[PARAM_MIT] if with_mitigation else 0)
 
 
 def fleet_update_kernel(params_ref, keys_ref, vals_ref, ts_ref, out_ref, *,
@@ -222,19 +248,22 @@ def fleet_update(keys, vals, ts, params, *, n_sub_max: int, width_max: int,
 
 def fleet_ragged_kernel(block_frag_ref, params_ref, keys_ref, vals_ref,
                         ts_ref, out_ref, *, w_blk: int, n_sub_max: int,
-                        log2_te: int, signed: bool, value_mode: str):
+                        log2_te: int, signed: bool, value_mode: str,
+                        with_levels: bool, with_mitigation: bool):
     """Ragged CSR body: one packet block of the flat stream, applied to
-    its owning fragment's counter tile (selected by the BlockSpec index
-    maps from the scalar-prefetched ``block_frag`` map)."""
-    wi = pl.program_id(0)   # width-block index
-    pj = pl.program_id(1)   # packet-block index (sequential reduction)
+    its owning row's counter tile (selected by the BlockSpec index maps
+    from the scalar-prefetched ``block_frag`` map; with UnivMon level
+    rows, the leading level grid axis fans the same packet block out to
+    the fragment's ``n_levels`` tiles)."""
+    wi = pl.program_id(1)   # width-block index
+    pj = pl.program_id(2)   # packet-block index (sequential reduction)
 
     cur = block_frag_ref[pj]
     prev = block_frag_ref[jnp.maximum(pj - 1, 0)]
 
     # First packet block of this fragment: zero its counter tile.  The
     # map is non-decreasing and every fragment owns >= 1 block, so every
-    # output tile is initialized exactly once per width block.
+    # output tile is initialized exactly once per (level, width) block.
     @pl.when((pj == 0) | (cur != prev))
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
@@ -244,58 +273,74 @@ def fleet_ragged_kernel(block_frag_ref, params_ref, keys_ref, vals_ref,
     # Dead-work skip: width blocks beyond this fragment's true width and
     # all-zero value blocks (blk-alignment / shape-bucket padding).
     live = ((wi * w_blk) < params[PARAM_WIDTH]) & jnp.any(vals != 0.0)
+    if with_levels:
+        # Level rows see a ~2^-level subsample: skip blocks with no key
+        # at this row's level (the packer folded level_of into ts).
+        lvl_pkt = ((ts_ref[...] >> np.uint32(LVL_SHIFT))
+                   & np.uint32(LVL_FIELD_MASK)).astype(jnp.int32)
+        live = live & jnp.any(lvl_pkt >= params[PARAM_LEVEL])
 
     @pl.when(live)
     def _accum():
         out_ref[...] += _frag_contrib(
             params, keys_ref[...], vals, ts_ref[...], wi=wi, w_blk=w_blk,
             n_sub_max=n_sub_max, log2_te=log2_te, signed=signed,
-            value_mode=value_mode)[None]
+            value_mode=value_mode, with_levels=with_levels,
+            with_mitigation=with_mitigation)[None]
 
 
 def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
                                n_sub_max: int, padded_width: int,
                                log2_te: int, signed: bool, blk: int,
                                w_blk: int, value_mode: str,
+                               n_levels: int = 1,
+                               with_mitigation: bool = False,
                                interpret: bool = False):
-    """Lowered pallas_call over the (width, packet-block) grid.
+    """Lowered pallas_call over the (level, width, packet-block) grid.
 
     ``keys``/``vals``/``ts``: flat ``(n_blocks * blk,)`` CSR stream;
-    ``block_frag``: ``(n_blocks,)`` non-decreasing int32 block->fragment
-    map covering every row of ``params`` (``repro.core.fleet.pack_csr``
-    builds both).  The packet axis is the inner sequential reduction, so
-    each fragment's counter tile is visited over a consecutive ``pj``
-    range and stays VMEM-resident while its blocks stream through.
+    ``block_frag``: ``(n_blocks,)`` non-decreasing int32 block->*packet
+    row* map (``repro.core.fleet.pack_csr`` builds both).  ``params``
+    has ``n_levels`` virtual rows per packet row — table/output row
+    ``bf[pj] * n_levels + l`` — so the packet stream is packed once per
+    fragment and the level axis fans it out in-grid.  The packet axis is
+    the inner sequential reduction, so each row's counter tile is
+    visited over a consecutive ``pj`` range and stays VMEM-resident
+    while its blocks stream through.
     """
     n_rows = params.shape[0]
     nb = block_frag.shape[0]
     assert keys.shape[0] == nb * blk and padded_width % w_blk == 0
-    grid = (padded_width // w_blk, nb)
+    assert n_rows % n_levels == 0
+    grid = (n_levels, padded_width // w_blk, nb)
     j_rows = w_blk // LANE
     kernel = functools.partial(
         fleet_ragged_kernel, w_blk=w_blk, n_sub_max=n_sub_max,
-        log2_te=log2_te, signed=signed, value_mode=value_mode)
+        log2_te=log2_te, signed=signed, value_mode=value_mode,
+        with_levels=n_levels > 1, with_mitigation=with_mitigation)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, N_PARAMS), lambda i, j, bf: (bf[j], 0)),
-            pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
-            pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
-            pl.BlockSpec((blk,), lambda i, j, bf: (j,)),
+            pl.BlockSpec((1, N_PARAMS),
+                         lambda l, i, j, bf: (bf[j] * n_levels + l, 0)),
+            pl.BlockSpec((blk,), lambda l, i, j, bf: (j,)),
+            pl.BlockSpec((blk,), lambda l, i, j, bf: (j,)),
+            pl.BlockSpec((blk,), lambda l, i, j, bf: (j,)),
         ],
-        out_specs=pl.BlockSpec((1, n_sub_max, j_rows, LANE),
-                               lambda i, j, bf: (bf[j], 0, i, 0)),
+        out_specs=pl.BlockSpec(
+            (1, n_sub_max, j_rows, LANE),
+            lambda l, i, j, bf: (bf[j] * n_levels + l, 0, i, 0)),
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(
             (n_rows, n_sub_max, padded_width // LANE, LANE), jnp.float32),
-        # Width blocks touch disjoint counter tiles: parallel (megacore);
-        # the packet axis accumulates per fragment: sequential.
+        # Level and width blocks touch disjoint counter tiles: parallel
+        # (megacore); the packet axis accumulates per row: sequential.
         compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_frag, params, keys, vals, ts)
 
@@ -310,28 +355,35 @@ def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
 _fleet_update_ragged_jit = jax.jit(
     fleet_update_ragged_pallas,
     static_argnames=("n_sub_max", "padded_width", "log2_te", "signed",
-                     "blk", "w_blk", "value_mode", "interpret"))
+                     "blk", "w_blk", "value_mode", "n_levels",
+                     "with_mitigation", "interpret"))
 
 
 def fleet_update_ragged(keys, vals, ts, params, block_frag, *,
                         n_sub_max: int, width_max: int, log2_te: int,
                         signed: bool = True, blk: int = 256,
                         w_blk: Optional[int] = None,
-                        value_mode: str = "auto", interpret="auto"):
+                        value_mode: str = "auto", n_levels: int = 1,
+                        with_mitigation: bool = False, interpret="auto"):
     """Compute all subepoch-record counters for a CSR-packed fleet epoch
     (or epoch window — rows are (epoch, fragment) pairs, see module doc).
 
     Args:
       keys/vals/ts: (n_blocks * blk,) flat CSR packet stream, fragment
         segments blk-aligned and value-0 padded (``pack_csr``).
-      params: (n_rows, N_PARAMS) int32 parameter table.
-      block_frag: (n_blocks,) int32 non-decreasing block->row map; every
-        row in [0, n_rows) must own at least one block.
+      params: (n_rows, N_PARAMS) int32 parameter table; with
+        ``n_levels > 1`` each packet row owns ``n_levels`` consecutive
+        virtual level rows (``n_rows = n_packet_rows * n_levels``).
+      block_frag: (n_blocks,) int32 non-decreasing block->packet-row
+        map; every packet row must own at least one block.
       blk: must match the packer's block size (the CSR alignment knob —
         kept small so per-fragment padding stays <= blk, unlike the
         compute-geometry ``blk`` of the dense paths).
       value_mode: contraction path ("auto" resolves from concrete
         values — see ``kernel.resolve_value_mode``).
+      n_levels: UnivMon level rows per packet row (1 = cs/cms).
+      with_mitigation: compile the §4.4 second-subepoch mask term
+        (PARAM_MIT rows; requires the packer's folded ts).
 
     Returns (n_rows, n_sub_max, width_max) float32 counters (exact
     integers while |c| < 2^24); entries outside a row's live
@@ -348,7 +400,8 @@ def fleet_update_ragged(keys, vals, ts, params, block_frag, *,
         jnp.asarray(ts, jnp.uint32), jnp.asarray(params, jnp.int32),
         jnp.asarray(block_frag, jnp.int32), n_sub_max=n_sub_max,
         padded_width=width_max + pad_w, log2_te=log2_te, signed=signed,
-        blk=blk, w_blk=w_blk, value_mode=value_mode, interpret=interpret)
+        blk=blk, w_blk=w_blk, value_mode=value_mode, n_levels=n_levels,
+        with_mitigation=with_mitigation, interpret=interpret)
     # Undo the kernel's factored (.., W/LANE, LANE) layout: free reshape.
     return (out.reshape(out.shape[0], n_sub_max, width_max + pad_w)
             [:, :, :width_max])
@@ -357,27 +410,35 @@ def fleet_update_ragged(keys, vals, ts, params, block_frag, *,
 def fleet_update_loop(keys, vals, ts, params, *, n_sub_max: int,
                       width_max: int, log2_te: int, signed: bool = True,
                       backend: str = "ref", **kw):
-    """Per-fragment loop baseline (and oracle): one ``sketch_update``
-    dispatch per fragment, results padded into the stacked layout.
+    """Per-row loop baseline (and oracle): one ``sketch_update`` dispatch
+    per parameter row, results padded into the stacked layout.
 
     ``backend="ref"`` gives the jnp scatter-add oracle; ``"pallas"`` gives
     the loop-of-kernels baseline the fleet path replaces (benchmarked in
-    benchmarks/kernel_bench.py).
+    benchmarks/kernel_bench.py).  With UnivMon virtual level rows,
+    ``params`` has ``n_levels`` rows per packet row of ``keys`` (inferred
+    from the shape ratio) and row ``f * n_levels + l`` re-dispatches
+    packet row ``f`` at its own level/mitigation parameters.
     """
     from .ops import sketch_update
 
     params = np.asarray(params)
-    n_frags = params.shape[0]
-    out = np.zeros((n_frags, n_sub_max, width_max), np.float32)
-    for f in range(n_frags):
-        width = int(params[f, PARAM_WIDTH])
-        n_sub = int(params[f, PARAM_N_SUB])
+    n_rows = params.shape[0]
+    assert n_rows % keys.shape[0] == 0
+    n_levels = n_rows // keys.shape[0]
+    out = np.zeros((n_rows, n_sub_max, width_max), np.float32)
+    for r in range(n_rows):
+        f = r // n_levels
+        width = int(params[r, PARAM_WIDTH])
+        n_sub = int(params[r, PARAM_N_SUB])
         o = sketch_update(
             jnp.asarray(keys[f]), jnp.asarray(vals[f]), jnp.asarray(ts[f]),
             width=width, n_sub=n_sub, log2_te=log2_te,
-            col_seed=int(params[f, PARAM_COL_SEED]),
-            sign_seed=int(params[f, PARAM_SIGN_SEED]),
-            sub_seed=int(params[f, PARAM_SUB_SEED]),
+            col_seed=int(params[r, PARAM_COL_SEED]),
+            sign_seed=int(params[r, PARAM_SIGN_SEED]),
+            sub_seed=int(params[r, PARAM_SUB_SEED]),
+            level=int(params[r, PARAM_LEVEL]),
+            mitigation=bool(params[r, PARAM_MIT]),
             signed=signed, backend=backend, **kw)
-        out[f, :n_sub, :width] = np.asarray(o)
+        out[r, :n_sub, :width] = np.asarray(o)
     return out

@@ -86,6 +86,25 @@ VALUE_MODES = ("count", "limb", "f32")
 LANE = 128
 LANE_BITS = 7
 
+# Packed-ts field layout (UnivMon / §4.4 on the fleet).  The kernel only
+# reads timestamp bits [shift, log2_te) — the subepoch bit-slice — so the
+# high bits of the uint32 ts word are free side-channels.  The fleet
+# packer (``repro.core.fleet.fold_packet_flags``) masks ts to its low
+# ``log2_te`` bits and folds in per-packet metadata the batched kernels
+# consume via the parameter table:
+#
+#   * bits [LVL_SHIFT, LVL_SHIFT+5): the packet key's UnivMon level id
+#     (``hashing.level_of``, computed once per packet on the host) — a
+#     virtual level row ``l`` monitors the packet iff ``lvl >= l``;
+#   * bit SH_SHIFT: the §4.4 single-hop flag — mitigation-enabled rows
+#     additionally monitor flagged packets in the flow's second subepoch.
+#
+# Consequences: UnivMon on the fleet requires log2_te <= LVL_SHIFT and
+# n_levels <= 32; mitigation alone requires log2_te <= SH_SHIFT.
+LVL_SHIFT = 24
+LVL_FIELD_MASK = 0x1F
+SH_SHIFT = 31
+
 #: Default VMEM budget for geometry selection: leave ~4 MiB of the
 #: 16 MiB/core for Mosaic's own double-buffering and spills.
 VMEM_BUDGET_BYTES = 12 * 2 ** 20
@@ -246,7 +265,7 @@ def _hash_mod(keys, seed, mod):
 
 def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
                   width, n_mask, shift, wi, w_blk, n_sub_rows, signed,
-                  value_mode: str = "f32"):
+                  value_mode: str = "f32", level=0, mit=0):
     """Shared per-packet-block body: hashes -> §4.1 monitored mask ->
     factored one-hots -> one or two MXU dots (see the module doc's value
     modes).  The single source of truth for the sketch update arithmetic;
@@ -254,6 +273,17 @@ def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
     be static Python ints (single-fragment) or traced uint32 scalars
     (per-fragment table, fleet); ``n_sub_rows`` (the output row count)
     and ``value_mode`` are always static.
+
+    ``level``/``mit`` extend the §4.1 monitored mask for the fleet's
+    virtual UnivMon level rows and the §4.4 single-hop mitigation.  Both
+    read per-packet metadata the packer folded into the high ts bits
+    (see the packed-ts layout above): a level row monitors only packets
+    whose key's level id (ts bits [LVL_SHIFT, LVL_SHIFT+5)) is >= the
+    row's ``level``, and a mitigation row additionally monitors
+    single-hop packets (ts bit SH_SHIFT) in the flow's *second* subepoch
+    ``(sub_flow + n/2) & (n-1)``.  Static Python zeros (the default, and
+    the single-fragment path) skip the extra VPU work entirely, keeping
+    existing callers bit-identical and cost-free.
 
     The column one-hot is *factored* into quotient/residue limbs,
     ``local_col = q * LANE + r``: the quotient is fused with the
@@ -279,7 +309,25 @@ def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
     sub_pkt = ((ts >> shift) & n_mask).astype(jnp.int32)
     # Subepoch the flow is monitored in (temporal sampling, §4.1).
     sub_flow = (_hash_u32(keys, sub_seed) & n_mask).astype(jnp.int32)
-    monitored = (sub_pkt == sub_flow).astype(jnp.float32)
+    monitored = sub_pkt == sub_flow
+    if not (isinstance(mit, int) and mit == 0):
+        # §4.4: single-hop flows (ts bit SH_SHIFT, folded by the packer)
+        # carry a second subepoch record at sub_flow + n/2.  Boolean OR,
+        # so n = 1 (sub2 == sub_flow) degenerates to a no-op exactly as
+        # in the numpy path's `n >= 2` guard.
+        sub2 = ((sub_flow + ((n_mask.astype(jnp.int32) + 1) >> 1))
+                & n_mask.astype(jnp.int32))
+        sh = (ts >> np.uint32(SH_SHIFT)) != 0
+        monitored = monitored | ((mit != 0) & sh & (sub_pkt == sub2))
+    if not (isinstance(level, int) and level == 0):
+        # UnivMon virtual level row: the packer folded level_of(key)
+        # into ts bits [LVL_SHIFT, LVL_SHIFT+5); level l sees only keys
+        # with lvl >= l (level 0 — and every non-UnivMon row — passes
+        # everything, garbage high bits included, since lvl_pkt >= 0).
+        lvl_pkt = ((ts >> np.uint32(LVL_SHIFT))
+                   & np.uint32(LVL_FIELD_MASK)).astype(jnp.int32)
+        monitored = monitored & (lvl_pkt >= level)
+    monitored = monitored.astype(jnp.float32)
 
     col = _hash_mod(keys, col_seed, width)          # (BLK,) in [0, width)
     if signed:
@@ -341,7 +389,8 @@ def block_contrib(keys, vals, ts, *, col_seed, sign_seed, sub_seed,
 def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
                          hash_width: int, w_blk: int, n_sub: int,
                          log2_te: int, col_seed: int, sign_seed: int,
-                         sub_seed: int, signed: bool, value_mode: str):
+                         sub_seed: int, signed: bool, value_mode: str,
+                         level: int = 0, mitigation: bool = False):
     wi = pl.program_id(0)   # width-block index
     pj = pl.program_id(1)   # packet-block index (sequential reduction)
 
@@ -363,7 +412,8 @@ def sketch_update_kernel(keys_ref, vals_ref, ts_ref, out_ref, *,
             n_mask=np.uint32(n_sub - 1),
             shift=np.uint32(log2_te - (n_sub.bit_length() - 1)),
             wi=wi, w_blk=w_blk, n_sub_rows=n_sub, signed=signed,
-            value_mode=value_mode)
+            value_mode=value_mode, level=level,
+            mit=1 if mitigation else 0)
 
 
 def sketch_update_pallas(keys, vals, ts, *, hash_width: int,
@@ -371,10 +421,13 @@ def sketch_update_pallas(keys, vals, ts, *, hash_width: int,
                          log2_te: int, col_seed: int, sign_seed: int,
                          sub_seed: int, signed: bool, blk: int = 1024,
                          w_blk: int = 2048, value_mode: str = "f32",
+                         level: int = 0, mitigation: bool = False,
                          interpret: bool = False):
     """Lowered pallas_call.  Inputs must be padded to a multiple of blk;
     padded_width a multiple of w_blk (ops.py handles padding).  Columns are
-    hashed modulo the *true* hash_width <= padded_width.
+    hashed modulo the *true* hash_width <= padded_width.  ``level``/
+    ``mitigation`` select the UnivMon-level / §4.4 monitored-mask terms
+    (static; require the packer's folded ts — see the packed-ts layout).
 
     The output uses the factored ``(n_sub, width_blocks*J, LANE)``
     layout — counters for subepoch s, column c live at
@@ -390,7 +443,7 @@ def sketch_update_pallas(keys, vals, ts, *, hash_width: int,
         sketch_update_kernel, hash_width=hash_width, w_blk=w_blk,
         n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
         sign_seed=sign_seed, sub_seed=sub_seed, signed=signed,
-        value_mode=value_mode)
+        value_mode=value_mode, level=level, mitigation=mitigation)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -92,11 +92,13 @@ def _guard_peak(out, check_overflow: bool):
 
 @functools.partial(jax.jit, static_argnames=(
     "width", "n_sub", "log2_te", "col_seed", "sign_seed", "sub_seed",
-    "signed", "blk", "w_blk", "value_mode", "interpret"))
+    "signed", "blk", "w_blk", "value_mode", "level", "mitigation",
+    "interpret"))
 def _sketch_update_jit(keys, vals, ts, *, width: int, n_sub: int,
                        log2_te: int, col_seed: int, sign_seed: int,
                        sub_seed: int, signed: bool, blk: int, w_blk: int,
-                       value_mode: str, interpret: bool):
+                       value_mode: str, level: int, mitigation: bool,
+                       interpret: bool):
     keys = _pad_to(keys.astype(jnp.uint32), blk)
     vals = _pad_to(vals.astype(jnp.float32), blk)
     ts = _pad_to(ts.astype(jnp.uint32), blk)
@@ -106,7 +108,8 @@ def _sketch_update_jit(keys, vals, ts, *, width: int, n_sub: int,
         keys, vals, ts, hash_width=width, padded_width=width + pad_w,
         n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
         sign_seed=sign_seed, sub_seed=sub_seed, signed=signed, blk=blk,
-        w_blk=w_blk, value_mode=value_mode, interpret=interpret)
+        w_blk=w_blk, value_mode=value_mode, level=level,
+        mitigation=mitigation, interpret=interpret)
     # Undo the kernel's factored (n_sub, W/LANE, LANE) layout: a free
     # contiguous reshape outside the kernel.
     return out.reshape(n_sub, width + pad_w)[:, :width]
@@ -116,7 +119,8 @@ def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
                   col_seed: int, sign_seed: int, sub_seed: int,
                   signed: bool = True, backend: str = "pallas",
                   blk: Optional[int] = None, w_blk: Optional[int] = None,
-                  value_mode: str = "auto", interpret="auto",
+                  value_mode: str = "auto", level: int = 0,
+                  mitigation: bool = False, interpret="auto",
                   check_overflow: bool = True):
     """Compute all subepoch-record counters for one fragment epoch.
 
@@ -125,12 +129,16 @@ def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
     contributes nothing (one-hot x 0 = 0).  ``blk``/``w_blk`` default to
     ``kernel.select_geometry`` for the resolved value mode;
     ``interpret="auto"`` (default) compiles on TPU and interprets on CPU.
+    ``level``/``mitigation`` select the UnivMon-level / §4.4 monitored
+    terms; both require ``ts`` with the packer's folded high bits
+    (``core.fleet.fold_packet_flags`` — see the packed-ts layout in
+    kernel.py).
     """
     if backend == "ref":
         out = sketch_update_ref(
             keys, vals, ts, width=width, n_sub=n_sub, log2_te=log2_te,
             col_seed=col_seed, sign_seed=sign_seed, sub_seed=sub_seed,
-            signed=signed)
+            signed=signed, level=level, mitigation=mitigation)
         return _guard_peak(out, check_overflow)
     interpret = resolve_interpret(interpret)
     value_mode = resolve_value_mode(value_mode, vals, interpret)
@@ -142,5 +150,6 @@ def sketch_update(keys, vals, ts, *, width: int, n_sub: int, log2_te: int,
         jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(ts), width=width,
         n_sub=n_sub, log2_te=log2_te, col_seed=col_seed,
         sign_seed=sign_seed, sub_seed=sub_seed, signed=signed, blk=blk,
-        w_blk=w_blk, value_mode=value_mode, interpret=interpret)
+        w_blk=w_blk, value_mode=value_mode, level=level,
+        mitigation=mitigation, interpret=interpret)
     return _guard_peak(out, check_overflow)

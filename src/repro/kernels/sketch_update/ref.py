@@ -1,15 +1,22 @@
-"""Pure-jnp oracle for the sketch_update kernel (scatter-add semantics)."""
+"""Pure-jnp oracle for the sketch_update kernel (scatter-add semantics).
+
+``level``/``mitigation`` mirror the kernel's extended §4.1 monitored
+mask for UnivMon virtual level rows and the §4.4 single-hop flag; both
+read the packer's folded high ts bits (see the packed-ts layout in
+kernel.py).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import _hash_mod, _hash_u32
+from .kernel import LVL_FIELD_MASK, LVL_SHIFT, SH_SHIFT, _hash_mod, _hash_u32
 
 
 def sketch_update_ref(keys, vals, ts, *, width: int, n_sub: int,
                       log2_te: int, col_seed: int, sign_seed: int,
-                      sub_seed: int, signed: bool):
+                      sub_seed: int, signed: bool, level: int = 0,
+                      mitigation: bool = False):
     keys = keys.astype(jnp.uint32)
     vals = vals.astype(jnp.float32)
     ts = ts.astype(jnp.uint32)
@@ -17,7 +24,16 @@ def sketch_update_ref(keys, vals, ts, *, width: int, n_sub: int,
     sub_pkt = ((ts >> shift) & jnp.uint32(n_sub - 1)).astype(jnp.int32)
     sub_flow = (_hash_u32(keys, jnp.uint32(sub_seed))
                 & jnp.uint32(n_sub - 1)).astype(jnp.int32)
-    monitored = (sub_pkt == sub_flow).astype(jnp.float32)
+    monitored = sub_pkt == sub_flow
+    if mitigation:
+        sub2 = (sub_flow + n_sub // 2) & (n_sub - 1)
+        sh = (ts >> jnp.uint32(SH_SHIFT)) != 0
+        monitored = monitored | (sh & (sub_pkt == sub2))
+    if level:
+        lvl_pkt = ((ts >> jnp.uint32(LVL_SHIFT))
+                   & jnp.uint32(LVL_FIELD_MASK)).astype(jnp.int32)
+        monitored = monitored & (lvl_pkt >= level)
+    monitored = monitored.astype(jnp.float32)
     col = _hash_mod(keys, jnp.uint32(col_seed), width)
     if signed:
         sgn = (jnp.float32(1.0) - 2.0 * (_hash_u32(keys, jnp.uint32(sign_seed))

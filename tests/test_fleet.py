@@ -429,17 +429,26 @@ def test_replayer_packet_cache_lru():
 
 
 def test_fleet_rejects_unsupported_configs():
-    frags = {0: FragmentConfig(frag_id=0, kind="um", memory_bytes=1024)}
-    with pytest.raises(ValueError, match="cs or cms"):
-        FleetEpochRunner(frags, log2_te=LOG2_TE)
+    # um and §4.4 mitigation are fleet-supported since PR 5: both
+    # construct cleanly (parity suite: tests/test_univmon_fleet.py)
+    frags = {0: FragmentConfig(frag_id=0, kind="um", memory_bytes=1024,
+                               mitigation=True)}
+    assert FleetEpochRunner(frags, log2_te=LOG2_TE).n_levels == 16
     mixed = {0: FragmentConfig(frag_id=0, kind="cs", memory_bytes=1024),
              1: FragmentConfig(frag_id=1, kind="cms", memory_bytes=1024)}
     with pytest.raises(ValueError, match="homogeneous"):
         FleetEpochRunner(mixed, log2_te=LOG2_TE)
-    frags = {0: FragmentConfig(frag_id=0, kind="cs", memory_bytes=1024,
-                               mitigation=True)}
-    with pytest.raises(ValueError, match="mitigation"):
-        FleetEpochRunner(frags, log2_te=LOG2_TE)
+    hetero = {0: FragmentConfig(frag_id=0, kind="um", memory_bytes=1024,
+                                n_levels=8),
+              1: FragmentConfig(frag_id=1, kind="um", memory_bytes=1024,
+                                n_levels=16)}
+    with pytest.raises(ValueError, match="n_levels"):
+        FleetEpochRunner(hetero, log2_te=LOG2_TE)
+    frags = {0: FragmentConfig(frag_id=0, kind="um", memory_bytes=1024)}
+    with pytest.raises(ValueError, match="log2_te"):
+        FleetEpochRunner(frags, log2_te=25)   # level id rides bits 24+
+    with pytest.raises(ValueError, match="dense"):
+        FleetEpochRunner(frags, log2_te=LOG2_TE, layout="dense")
     with pytest.raises(ValueError, match="backend"):
         DiSketchSystem({0: 1024}, "cs", rho_target=1.0, log2_te=LOG2_TE,
                        backend="warp")
