@@ -33,7 +33,8 @@ import numpy as np
 from .common import emit
 
 _MATCH_COLS = ("pallas_matches_ref", "fleet_matches_loop",
-               "ragged_matches_dense", "query_matches_oracle")
+               "ragged_matches_dense", "query_matches_oracle",
+               "resilience_ok")
 SCHEMA = 2
 #: headline metrics gated against the committed baseline (>20% drop fails)
 _GATED = ("ragged_pkts_per_s", "uniform_fleet_speedup_x")
@@ -95,6 +96,13 @@ def headline_from_rows(rows, quick: bool = True) -> dict:
             h["um_fleet_pkts_per_s"] = r["pkts_per_s"]
             h["um_fleet_speedup_x"] = r["fleet_speedup_x"]
             h["um_query_keys_per_s"] = r["level_query_keys_per_s"]
+        elif r.get("bench") == "resilience":
+            # churn plane: how much the masked policy beats the
+            # failure-oblivious baseline at the worst failure fraction
+            # (correctness-gated via resilience_ok, not perf-gated)
+            h["resilience_masked_improvement_x"] = max(
+                h.get("resilience_masked_improvement_x", 0),
+                r["masked_improvement_x"])
     return h
 
 
@@ -260,9 +268,12 @@ def run(quick: bool = True):
             "ref_pkts_per_s": round(p / t_ref),
         })
     emit("kernel_bench", [r for r in rows if r["bench"] == "single_kernel"])
+    from .resilience import run as run_resilience
+
     rows = (rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
             + run_query_plane(quick=quick)
-            + run_univmon_fleet(quick=quick))
+            + run_univmon_fleet(quick=quick)
+            + run_resilience(quick=quick))
     headline = headline_from_rows(rows, quick=quick)
     path = write_bench_json(rows, headline)
     print(f"headline: {json.dumps(headline)}")

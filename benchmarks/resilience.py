@@ -1,0 +1,101 @@
+"""Benchmark: query error vs fraction of failed switches (churn plane).
+
+A FatTree(4) replay in fleet window mode with a ``FailureSchedule``
+killing a random fraction of switches mid-window (their un-exported
+epochs are lost with the reclaimed memory), then the same window query
+under the three failure policies:
+
+  * ``oblivious`` — pretend nothing failed; the zeroed rows poison the
+    min/median merges (the baseline a failure-unaware deployment pays);
+  * ``mask``      — drop dead/lost cells from every merge and
+    extrapolate blind epochs (the §4.3 blind-spot treatment);
+  * ``recover``   — first reconstruct XOR-parity-recoverable lost cells
+    (one parity fragment per group of 5), then mask the rest.
+
+Runs in interpret mode as a correctness gate: each row's
+``resilience_ok`` asserts that at >= 10% failed switches both masked and
+recovered error stay strictly below the failure-oblivious baseline.
+Chained into ``benchmarks.kernel_bench`` (rows land in
+``BENCH_kernel.json``; a false ``resilience_ok`` fails CI).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit, memories_for
+
+
+def run(quick: bool = True):
+    from repro.core.disketch import DiSketchSystem, calibrate_rho_target
+    from repro.core.fleet import parity_groups_chunked
+    from repro.net.simulator import FailureSchedule, Replayer, rmse
+    from repro.net.topology import FatTree
+    from repro.net.traffic import gen_workload
+
+    topo = FatTree(4)
+    n_epochs = 8
+    wl = gen_workload(topo, n_flows=4_000 if quick else 50_000,
+                      total_packets=40_000 if quick else 500_000,
+                      n_epochs=n_epochs, burstiness=0.2, seed=11)
+    rep = Replayer(wl, topo.n_switches)
+    rng = np.random.RandomState(7)
+    mems = memories_for(topo, 32 * 1024, 0.0, rng)
+    rho = calibrate_rho_target(mems, "cms",
+                               rep.epoch_stream(n_epochs // 2), wl.log2_te)
+    sel = wl.path_len == 5
+    keys, truth = wl.keys[sel], wl.sizes[sel]
+    paths = [p for p, s in zip(wl.paths, sel) if s]
+    epochs = list(range(n_epochs))
+    window = 4
+    # deaths land at window offset 1: one un-exported epoch per victim is
+    # lost (parity-recoverable), the rest of the window is masked
+    down_epoch = n_epochs - 3
+
+    fracs = [0.0, 0.1, 0.25] if quick else [0.0, 0.05, 0.1, 0.25, 0.5]
+    rows = []
+    for frac in fracs:
+        sched = FailureSchedule.random(topo.n_switches, frac,
+                                       down_epoch=down_epoch, seed=3)
+        system = DiSketchSystem(
+            mems, "cms", rho_target=rho, log2_te=wl.log2_te,
+            backend="fleet",
+            fleet_kwargs={"interpret": True,
+                          "parity_groups": parity_groups_chunked(
+                              tuple(range(topo.n_switches)), 5)})
+        t0 = time.perf_counter()
+        rep.run(system, window=window, failures=sched)
+        t_run = time.perf_counter() - t0
+        errs = {}
+        # policy order matters: "recover" patches the window stacks in
+        # place, so it must be measured last
+        for pol in ("oblivious", "mask", "recover"):
+            est = system.query_flows(keys, paths, epochs,
+                                     merge="fragment", failures=pol)
+            errs[pol] = rmse(est, truth)
+        n_failed = sum(1 for sw in range(topo.n_switches)
+                       if not sched.is_up(sw, n_epochs - 1))
+        ok = (n_failed == 0 or frac < 0.10 - 1e-9
+              or (errs["mask"] < errs["oblivious"]
+                  and errs["recover"] < errs["oblivious"]))
+        rows.append({
+            "bench": "resilience", "kind": "cms",
+            "frac_failed": frac, "n_failed": n_failed,
+            "window": window, "down_epoch": down_epoch,
+            "rmse_oblivious": round(errs["oblivious"], 4),
+            "rmse_masked": round(errs["mask"], 4),
+            "rmse_recovered": round(errs["recover"], 4),
+            "masked_improvement_x": round(
+                errs["oblivious"] / max(errs["mask"], 1e-12), 2),
+            "recovered_improvement_x": round(
+                errs["oblivious"] / max(errs["recover"], 1e-12), 2),
+            "resilience_ok": bool(ok),
+            "pkts_per_s": round(len(wl.pkt_flow) / t_run),
+        })
+    emit("resilience", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

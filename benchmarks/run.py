@@ -13,6 +13,7 @@ SUITES = [
     ("path_length", "Fig. 16 — path-length effects + mitigation"),
     ("equalization", "§4.2 — Eq. 6 control-loop convergence"),
     ("kernel_bench", "§5 — sketch_update kernel harness"),
+    ("resilience", "churn — query error vs failed-switch fraction"),
     ("compression", "beyond-paper — DiSketch gradient compression"),
     ("roofline", "§Roofline — dry-run derived terms"),
 ]

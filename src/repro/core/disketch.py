@@ -82,6 +82,17 @@ class DiSketchSystem:
         self.records: Dict[int, Dict[int, EpochRecords]] = {}  # epoch -> sw
         self.peb_log: List[Dict[int, float]] = []
         self.n_log: List[Dict[int, int]] = []
+        # -- churn state (net.simulator.FailureSchedule drives this) -----
+        # Switches whose sketch resource is currently reclaimed.  A dead
+        # switch keeps forwarding traffic (disaggregation uses residual
+        # resources, §1) — it just stops counting: its packets become
+        # value-0 no-ops on the fleet, it is skipped by the loop backend,
+        # masked from every query path, and held out of the §4.2 control.
+        self.dead: set = set()
+        self._dead_at: Dict[int, frozenset] = {}   # epoch -> dead set
+        # Resource-reclaim shrinks arriving mid-window are deferred to
+        # the next dispatch boundary (widths are frozen per window).
+        self._pending_shrink: Dict[int, float] = {}
         if backend not in ("loop", "fleet"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
@@ -91,16 +102,108 @@ class DiSketchSystem:
             self.fleet = FleetEpochRunner(self.fragments, log2_te,
                                           **(fleet_kwargs or {}))
 
+    # -- churn control plane -------------------------------------------------
+
+    def apply_event(self, event, *, defer_shrink: bool = False) -> None:
+        """Apply one churn event to the control plane.
+
+        ``event`` is duck-typed (``net.simulator.FailureEvent`` or any
+        object with ``.kind`` in {"fail", "shrink", "recover"},
+        ``.switch``, and ``.factor``) so the core never imports the
+        simulator.  "fail" reclaims the switch's sketch resource and
+        triggers §6 re-equalization of the survivors; "recover" rejoins
+        the switch as a fresh fragment at n_0 = 1 (§4.2 — its history is
+        gone with the reclaimed memory); "shrink" multiplies the
+        fragment's memory by ``event.factor`` — immediately, or deferred
+        to the next dispatch boundary when ``defer_shrink`` (widths are
+        frozen within a window).
+        """
+        sw = event.switch
+        if sw not in self.fragments:
+            raise KeyError(f"churn event for unknown switch {sw}")
+        if event.kind == "fail":
+            if sw not in self.dead:
+                self.dead.add(sw)
+                self._reequalize_survivors()
+        elif event.kind == "recover":
+            if sw in self.dead:
+                self.dead.discard(sw)
+                self.ns[sw] = 1
+        elif event.kind == "shrink":
+            if defer_shrink:
+                self._pending_shrink[sw] = (self._pending_shrink.get(sw, 1.0)
+                                            * event.factor)
+            else:
+                self._apply_shrink(sw, event.factor)
+        else:
+            raise ValueError(f"unknown churn event kind {event.kind!r}")
+
+    def _last_pebs(self) -> Dict[int, float]:
+        last: Dict[int, float] = {}
+        for pebs in self.peb_log:
+            last.update(pebs)
+        return last
+
+    def _reequalize_survivors(self) -> None:
+        # §6: a death shifts no load (the switch keeps forwarding), but
+        # the survivors' last observed PEBs are the freshest signal the
+        # controller has — jump each survivor to its converged Eq. 6
+        # setting in one control step instead of the factor-2-per-epoch
+        # ramp.  Survivors already inside the [rho/2, 2rho] band (and
+        # switches with no observation yet) are untouched, so an
+        # equalized fleet stays bit-identical after an off-path death.
+        if not self.subepoching:
+            return
+        last = self._last_pebs()
+        survivors = {sw: n for sw, n in self.ns.items() if sw not in self.dead}
+        self.ns.update(equalize.reequalize(survivors, last, self.rho_target))
+
+    def _apply_shrink(self, sw: int, factor: float) -> None:
+        from dataclasses import replace as dc_replace
+
+        cfg = self.fragments[sw]
+        new_mem = max(int(cfg.memory_bytes * factor), 4 * cfg.counter_bytes)
+        w_old = cfg.width
+        self.fragments[sw] = dc_replace(cfg, memory_bytes=new_mem)
+        if self.fleet is not None:
+            self.fleet.refresh_widths()
+        # Predictive §6 control: fewer columns concentrate the same load
+        # onto proportionally fewer counters, scaling the Eq. 4 bound by
+        # ~w_old/w_new.  Converge n against that prediction now; the
+        # next observed epoch corrects any modelling error through the
+        # ordinary Eq. 6 loop.
+        if self.subepoching and sw not in self.dead:
+            last = self._last_pebs().get(sw)
+            w_new = self.fragments[sw].width
+            if last is not None and last > 0 and w_new != w_old:
+                self.ns[sw] = equalize.converge_n(
+                    self.ns[sw], last * (w_old / w_new), self.rho_target)
+
+    def _apply_pending_shrinks(self) -> None:
+        for sw, factor in self._pending_shrink.items():
+            self._apply_shrink(sw, factor)
+        self._pending_shrink.clear()
+
+    # -- data plane ----------------------------------------------------------
+
     def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream],
-                  packet=None) -> None:
+                  packet=None, events: Optional[Sequence] = None) -> None:
         """Process one epoch.  ``packet`` (a prepacked ``FleetPacket``,
         e.g. from ``Replayer.epoch_packet``) lets the fleet backend skip
-        re-packing ``streams``; the loop backend ignores it."""
+        re-packing ``streams``; the loop backend ignores it.  ``events``
+        are churn events taking effect at this epoch's start."""
+        self._apply_pending_shrinks()
+        for ev in (events or ()):
+            self.apply_event(ev)
+        if self.dead:
+            self._dead_at[epoch] = frozenset(self.dead)
+        else:
+            self._dead_at.pop(epoch, None)
         if self.backend == "fleet":
             ns = (self.ns if self.subepoching
                   else {sw: 1 for sw in self.fragments})
             recs, pebs = self.fleet.run_epoch(epoch, ns, streams,
-                                              packet=packet)
+                                              packet=packet, dead=self.dead)
         else:
             recs, pebs = self._run_epoch_loop(epoch, streams)
         if self.subepoching:
@@ -118,6 +221,8 @@ class DiSketchSystem:
         recs: Dict[int, EpochRecords] = {}
         pebs: Dict[int, float] = {}
         for sw, cfg in self.fragments.items():
+            if sw in self.dead:
+                continue
             st = streams.get(sw)
             n = self.ns[sw] if self.subepoching else 1
             if st is None or len(st.keys) == 0:
@@ -132,7 +237,9 @@ class DiSketchSystem:
 
     def run_window(self, epoch0: int,
                    streams_list: Sequence[Dict[int, SwitchStream]],
-                   packets: Optional[Sequence] = None) -> None:
+                   packets: Optional[Sequence] = None,
+                   events_by_epoch: Optional[Sequence[Sequence]] = None,
+                   ) -> None:
         """Process ``len(streams_list)`` consecutive epochs starting at
         ``epoch0`` in ONE fleet super-dispatch (window mode).
 
@@ -143,20 +250,58 @@ class DiSketchSystem:
         ``FleetPacket``s, e.g. from ``Replayer.epoch_packet``) skip
         re-packing.  Non-fleet backends fall back to per-epoch
         processing (exact per-epoch control).
+
+        ``events_by_epoch`` (one event sequence per window offset)
+        injects churn: a mid-window "fail" at offset e masks the
+        switch's epochs >= e AND marks its un-exported earlier epochs
+        [0, e) as *lost* — the reclaimed memory held them; they are
+        zeroed unless an XOR-parity group (``fleet_kwargs=
+        {"parity_groups": ...}``) makes them recoverable.  Mid-window
+        shrink events defer to the next dispatch (widths are frozen per
+        window); fail/recover control effects (re-equalized survivors,
+        n reset) also land on the next dispatch for the same reason.
         """
         if self.backend != "fleet":
             for e, streams in enumerate(streams_list):
-                self.run_epoch(epoch0 + e, streams)
+                self.run_epoch(
+                    epoch0 + e, streams,
+                    events=events_by_epoch[e] if events_by_epoch else None)
             return
         from .fleet import pack_streams
 
+        e_count = len(streams_list)
+        if events_by_epoch is not None and len(events_by_epoch) != e_count:
+            raise ValueError("events_by_epoch must have one entry per epoch "
+                             f"({len(events_by_epoch)} != {e_count})")
+        self._apply_pending_shrinks()
+        for ev in (events_by_epoch[0] if events_by_epoch else ()):
+            self.apply_event(ev)
         ns = (dict(self.ns) if self.subepoching
               else {sw: 1 for sw in self.fragments})
+        dead_sets = [frozenset(self.dead)]
+        fail_pts: List[Tuple[int, int]] = []
+        for e in range(1, e_count):
+            for ev in (events_by_epoch[e] if events_by_epoch else ()):
+                if ev.kind == "fail" and ev.switch not in self.dead:
+                    fail_pts.append((e, ev.switch))
+                self.apply_event(ev, defer_shrink=True)
+            dead_sets.append(frozenset(self.dead))
+        lost_sets: List[set] = [set() for _ in range(e_count)]
+        for e, sw in fail_pts:
+            for e2 in range(e):
+                if sw not in dead_sets[e2]:
+                    lost_sets[e2].add(sw)
         if packets is None:
             packets = [pack_streams(st, self.fleet.frag_order)
                        for st in streams_list]
-        recs_list, pebs_list = self.fleet.run_window(epoch0, ns, packets)
+        recs_list, pebs_list = self.fleet.run_window(
+            epoch0, ns, packets,
+            dead_by_epoch=dead_sets, lost_by_epoch=lost_sets)
         for e, (recs, pebs) in enumerate(zip(recs_list, pebs_list)):
+            if dead_sets[e]:
+                self._dead_at[epoch0 + e] = dead_sets[e]
+            else:
+                self._dead_at.pop(epoch0 + e, None)
             self.records[epoch0 + e] = recs
             self.peb_log.append(pebs)
             if self.subepoching:
@@ -167,8 +312,18 @@ class DiSketchSystem:
 
     # -- query plane --------------------------------------------------------
 
-    def _records_for(self, path: Sequence[int],
-                     epochs: Sequence[int]) -> List[List[EpochRecords]]:
+    def _valid(self, sw: int, epoch: int) -> bool:
+        """Is (switch, epoch) a genuine observation?  Dead and lost
+        cells are not; parity-recovered cells are again."""
+        if self.fleet is not None:
+            live = self.fleet.frag_live(epoch)
+            if live is None:
+                return True
+            return bool(live[self.fleet._frag_pos[sw]])
+        return sw not in self._dead_at.get(epoch, frozenset())
+
+    def _records_for(self, path: Sequence[int], epochs: Sequence[int],
+                     failures: str = "mask") -> List[List[EpochRecords]]:
         # A window query over an unprocessed epoch must fail loudly: a
         # silently dropped epoch truncates the O_Q = Sum(O) estimate,
         # which looks like sketch error, not like the caller's bug it is
@@ -177,12 +332,16 @@ class DiSketchSystem:
         if missing:
             raise KeyError(f"epochs {missing} have no records "
                            "(not processed); run them before querying")
-        return [[self.records[e][sw] for sw in path if sw in self.records[e]]
+        if failures == "oblivious":
+            return [[self.records[e][sw] for sw in path
+                     if sw in self.records[e]] for e in epochs]
+        return [[self.records[e][sw] for sw in path
+                 if sw in self.records[e] and self._valid(sw, e)]
                 for e in epochs]
 
     def query_flows(self, keys: np.ndarray, paths: Sequence[Tuple[int, ...]],
-                    epochs: Sequence[int],
-                    merge: str = "subepoch") -> np.ndarray:
+                    epochs: Sequence[int], merge: str = "subepoch",
+                    failures: str = "mask") -> np.ndarray:
         """Window frequency estimates for flows with per-flow paths.
 
         On the fleet backend with ``merge="fragment"``, windows whose
@@ -197,7 +356,22 @@ class DiSketchSystem:
         sees the full stream) on both planes; §4.4 mitigation's
         second-subepoch average applies per path group (single-hop ==
         path length 1) on both planes too.
+
+        ``failures`` sets the churn policy (both planes):
+          * ``"mask"`` (default) — drop dead/lost fragment-epochs from
+            the merge; a path whose fragments are all out for some epoch
+            makes that epoch *blind* and the window estimate is
+            extrapolated by E / E_observable (the §4.3 temporal
+            blind-spot treatment applied across epochs).  A path with
+            zero observable epochs raises.
+          * ``"recover"`` — first reconstruct every XOR-parity-
+            recoverable lost cell (``FleetEpochRunner.recover``), then
+            mask whatever remains.
+          * ``"oblivious"`` — pretend nothing failed (the zeroed rows
+            poison min/median merges); baseline for benchmarks.
         """
+        if failures not in ("oblivious", "mask", "recover"):
+            raise ValueError(f"unknown failure policy {failures!r}")
         keys = np.asarray(keys, dtype=np.uint32)
         out = np.zeros(len(keys))
         by_path: Dict[Tuple[int, ...], List[int]] = {}
@@ -205,6 +379,11 @@ class DiSketchSystem:
             by_path.setdefault(tuple(p), []).append(i)
         device_ok = (merge == "fragment" and self.fleet is not None
                      and self.fleet.has_device_window(epochs))
+        if failures == "recover" and self.fleet is not None and not device_ok:
+            # the device path recovers inside window_query; the record
+            # path needs the stacks patched before materialization
+            self.fleet.recover(epochs)
+            failures = "mask"
         # um frequency estimates come from level 0 (the full-stream
         # level); the record plane needs level=None for non-um kinds.
         level = 0 if self.kind == "um" else None
@@ -213,12 +392,24 @@ class DiSketchSystem:
             if device_ok:
                 out[idxs] = self.fleet.window_query(
                     epochs, keys[idxs], path=path, level=0,
-                    single_hop=len(path) == 1)
+                    single_hop=len(path) == 1, failures=failures)
                 continue
+            recs = self._records_for(path, epochs, failures=failures)
+            scale = 1.0
+            if failures != "oblivious":
+                obs = [r for r in recs if r]
+                if not obs:
+                    raise ValueError(
+                        f"no epoch in {list(epochs)} has a live fragment on "
+                        f"path {path}; the window is unobservable")
+                # query_window skips empty (blind) epochs; extrapolate
+                # O_Q from the observed ones (§4.3 blind-spot fill,
+                # lifted from subepoch slots to whole epochs).
+                scale = len(recs) / len(obs)
             sh = np.full(len(idxs), len(path) == 1)
             out[idxs] = query.query_window(
-                self._records_for(path, epochs), keys[idxs], self.kind,
-                single_hop=sh, level=level, merge=merge)
+                recs, keys[idxs], self.kind,
+                single_hop=sh, level=level, merge=merge) * scale
         return out
 
     def query_entropy(self, keys: np.ndarray,
@@ -226,7 +417,8 @@ class DiSketchSystem:
                       epochs: Sequence[int], total: float,
                       n_levels: int = 16, level_seed: int = 7777,
                       k_heavy: int = 1024,
-                      merge: str = "subepoch") -> float:
+                      merge: str = "subepoch",
+                      failures: str = "mask") -> float:
         """Network-wide empirical entropy from the UnivMon level stack.
 
         ``merge="fragment"`` selects the §4.2 proportional-scaling
@@ -237,8 +429,16 @@ class DiSketchSystem:
         top-down G-sum combine, with only the per-level estimates and
         one scalar crossing the host boundary.  The default subepoch
         merge always goes through the per-record plane.
+
+        ``failures`` follows ``query_flows``; note the record plane
+        masks dead/lost cells but does not extrapolate blind epochs
+        (the G-sum is not additive across epochs), while the device
+        plane applies the same E / E_observable scaling to the
+        per-level frequency estimates as the frequency path.
         """
         assert self.kind == "um"
+        if failures not in ("oblivious", "mask", "recover"):
+            raise ValueError(f"unknown failure policy {failures!r}")
         by_path: Dict[Tuple[int, ...], List[int]] = {}
         for i, p in enumerate(paths):
             by_path.setdefault(tuple(p), []).append(i)
@@ -256,7 +456,7 @@ class DiSketchSystem:
                 if not len(ks):
                     continue
                 ests.append(self.fleet.um_level_window_query(
-                    epochs, ks, path=path))
+                    epochs, ks, path=path, failures=failures))
                 lvls.append(query.H.level_of(ks, level_seed, n_levels))
             if not ests:
                 return 0.0 if total <= 0 else float(np.log2(total))
@@ -266,9 +466,12 @@ class DiSketchSystem:
             if total <= 0:
                 return 0.0
             return float(np.log2(total) - s / total)
+        if failures == "recover" and self.fleet is not None:
+            self.fleet.recover(epochs)
+            failures = "mask"
         recs, keysets = [], []
         for path, idxs in by_path.items():
-            recs.append(self._records_for(path, epochs))
+            recs.append(self._records_for(path, epochs, failures=failures))
             keysets.append(keys[np.asarray(idxs)])
         return query.um_entropy_window(recs, keysets, n_levels, level_seed,
                                        total, k_heavy=k_heavy, merge=merge)
@@ -327,7 +530,13 @@ class AggregatedSystem:
                 self.specs[sw] = sketches.SketchSpec(kind, depth, w,
                                                      seed=seed + sw)
 
-    def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream]) -> None:
+    def run_epoch(self, epoch: int, streams: Dict[int, SwitchStream],
+                  events: Optional[Sequence] = None) -> None:
+        if events:
+            raise ValueError(
+                "AggregatedSystem models no churn: a monolithic core sketch "
+                "has no reclaimable per-switch fragments; failure schedules "
+                "apply to disaggregated systems only")
         recs = {}
         for sw, spec in self.specs.items():
             st = streams.get(sw)

@@ -98,3 +98,43 @@ def next_n(n: int, peb: float, rho_target: float) -> int:
     if peb < rho_target / 2.0:
         return max(1, n // 2)
     return n
+
+
+def converge_n(n: int, peb: float, rho_target: float) -> int:
+    """Iterate the Eq. 6 control to its fixed point in one shot.
+
+    ``peb`` is the PEB *measured at the current* ``n``; under the §4.2
+    error model each doubling of the subepoch count halves a record's
+    load and hence its Eq. 4 bound, so the predicted PEB at ``n'`` is
+    ``peb * n / n'``.  The per-epoch loop walks ``next_n`` one factor-2
+    step per epoch; after a churn event (fragment death or a
+    resource-reclaim shrink) the controller instead jumps the survivors
+    straight to the converged setting — the [rho/2, 2*rho] acceptance
+    band spans a factor of 4 while steps move a factor of 2, so the
+    iteration cannot oscillate and terminates within log2(N_MAX) steps.
+    A fragment already inside the band is returned unchanged (re-running
+    re-equalization is idempotent).
+    """
+    if peb <= 0.0 or not np.isfinite(peb):
+        return n
+    n0, peb0 = n, peb
+    for _ in range(2 * N_MAX.bit_length()):
+        nn = next_n(n, peb0 * n0 / n, rho_target)
+        if nn == n:
+            return n
+        n = nn
+    return n
+
+
+def reequalize(ns, pebs, rho_target: float):
+    """§6 re-equalization after a churn event: converge every surviving
+    fragment's subepoch count against its last observed PEB.
+
+    ``ns``: {switch: current n}; ``pebs``: {switch: last observed PEB}
+    (switches with no observation yet — e.g. a fleet that failed before
+    its first epoch completed — are left untouched, preserving the
+    bit-identity of the survivors with a never-failed fleet).  Returns
+    the new {switch: n} for exactly the switches in ``ns``.
+    """
+    return {sw: converge_n(n, pebs[sw], rho_target) if sw in pebs else n
+            for sw, n in ns.items()}

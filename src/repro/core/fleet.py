@@ -187,6 +187,39 @@ def fold_packet_flags(packet: FleetPacket, log2_te: int, *,
     return replace(packet, ts=ts)
 
 
+def mask_fragment_values(packet: FleetPacket,
+                         positions: Sequence[int]) -> FleetPacket:
+    """Mask fragments out of a packed epoch by zeroing their segments'
+    values: value-0 packets are kernel no-ops (the same property the blk
+    padding relies on), so a masked fragment's counters come out exactly
+    zero while every compiled shape (offsets, block map, packet count)
+    stays unchanged — no re-pack, no re-compile.  ``positions`` are
+    ``frag_order`` positions (a dead switch keeps *forwarding*; only its
+    reclaimed sketch resource stops counting).  Keys/ts arrays are
+    shared with the input packet; only ``values`` is copied."""
+    if not len(positions):
+        return packet
+    vals = np.array(packet.values, copy=True)
+    for i in positions:
+        vals[int(packet.offsets[i]):int(packet.offsets[i + 1])] = 0
+    return replace(packet, values=vals)
+
+
+def parity_groups_chunked(frag_order: Sequence[int],
+                          group_size: int) -> List[List[int]]:
+    """Disjoint XOR-parity groups by chunking the fleet order: each
+    group of ``group_size`` switches shares one parity row set (the last
+    group may be smaller).  Any single lost fragment per group per epoch
+    is then exactly reconstructible; group size trades parity memory
+    (one fragment-equivalent per group) against the probability of a
+    double loss."""
+    if group_size < 1:
+        raise ValueError(f"group_size must be >= 1, got {group_size}")
+    order = list(frag_order)
+    return [order[i:i + group_size]
+            for i in range(0, len(order), group_size)]
+
+
 def _bucket_blocks(nb: int, floor: int = 32) -> int:
     """Round a block count up to a shape bucket: exact below ``floor``,
     then 16 buckets per octave (padded blocks <= 6.25%), so the jit'd
@@ -415,6 +448,28 @@ class _WindowBuffer:
             self._dev = None
         return self._host
 
+    def epoch_view(self, e_idx: int) -> np.ndarray:
+        """Host copy/view of one epoch's (R, S, W) slice without forcing
+        the full-window transfer while still resident."""
+        if self.resident:
+            return np.asarray(self.device()[e_idx])
+        return self.host()[e_idx]
+
+    def patch(self, e_idx: int, row_lo: int, row_hi: int,
+              counters: np.ndarray) -> None:
+        """Overwrite rows ``[row_lo, row_hi)`` of one epoch with exact
+        integer counters (XOR-parity recovery): patches the resident
+        device array, or the already-transferred host copy *in place* so
+        every existing record-plane view observes the reconstruction."""
+        if self.resident:
+            import jax.numpy as jnp
+
+            self._dev = self.device().at[e_idx, row_lo:row_hi].set(
+                jnp.asarray(counters, jnp.float32))
+        else:
+            self._host[e_idx, row_lo:row_hi] = np.asarray(counters,
+                                                          np.int64)
+
 
 class WindowRecords(Mapping):
     """Lazy ``{switch: EpochRecords}`` view over one epoch of a window.
@@ -506,7 +561,8 @@ class FleetEpochRunner:
                  *, blk: int = 256, w_blk: Optional[int] = None,
                  interpret="auto", keep_stacked: bool = False,
                  layout: str = "ragged", value_mode: str = "auto",
-                 group_by_n_sub: bool = True):
+                 group_by_n_sub: bool = True,
+                 parity_groups: Optional[Sequence[Sequence[int]]] = None):
         from ..kernels.sketch_update.kernel import (LVL_FIELD_MASK,
                                                     LVL_SHIFT, SH_SHIFT)
 
@@ -577,6 +633,37 @@ class FleetEpochRunner:
         # hold, so this registry does not extend their lifetime for
         # systems that retain records (DiSketchSystem always does).
         self._window_bufs: Dict[int, Tuple[_WindowBuffer, int]] = {}
+        # --- fragment liveness under churn ------------------------------
+        # epoch -> (n_rows,) bool row liveness; an absent entry means
+        # every row is live (the no-failure fast path stays untouched).
+        self._row_live: Dict[int, np.ndarray] = {}
+        # epoch -> set of frag_order positions whose counters were lost
+        # (reclaimed before the window export) — maskable, and
+        # recoverable from parity while a single loss per group.
+        self._lost: Dict[int, set] = {}
+        # epoch -> per-group (n_levels, n_sub_max, width_max) int32 XOR
+        # parity over the group members' rows (computed from the same
+        # window dispatch, before lost cells are zeroed).
+        self._parity: Dict[int, List[np.ndarray]] = {}
+        self._frag_pos = {sw: i for i, sw in enumerate(self.frag_order)}
+        self.parity_groups: Optional[List[np.ndarray]] = None
+        self._group_of: Dict[int, int] = {}
+        if parity_groups is not None:
+            self.parity_groups = []
+            for gi, group in enumerate(parity_groups):
+                idx = []
+                for sw in group:
+                    if sw not in self._frag_pos:
+                        raise ValueError(
+                            f"parity group switch {sw} is not in the fleet")
+                    i = self._frag_pos[sw]
+                    if i in self._group_of:
+                        raise ValueError(
+                            f"switch {sw} appears in more than one parity "
+                            "group")
+                    self._group_of[i] = gi
+                    idx.append(i)
+                self.parity_groups.append(np.asarray(idx, np.int64))
 
     # Exactness bound.  Counters are f32 accumulations: exact while
     # every intermediate magnitude stays below 2^24.  For unsigned (cms)
@@ -645,15 +732,33 @@ class FleetEpochRunner:
         return FK.fleet_update_ragged(keys, vals, ts, params, block_frag,
                                       **kw)
 
+    def refresh_widths(self) -> None:
+        """Recompute the cached width vectors after a resource-reclaim
+        shrink replaced a ``FragmentConfig``.  Past epochs are
+        unaffected: queries read their hash moduli from the per-epoch
+        parameter tables, which are immutable once built."""
+        self.widths = np.array([self.fragments[sw].width
+                                for sw in self.frag_order], np.int64)
+        self.row_widths = np.repeat(self.widths, self.n_levels)
+
     def run_epoch(self, epoch: int, ns: Dict[int, int],
                   streams: Dict[int, "SwitchStream"],
                   packet: Optional[FleetPacket] = None,
+                  dead: Optional[Sequence[int]] = None,
                   ) -> Tuple[Dict[int, EpochRecords], Dict[int, float]]:
         from ..kernels.sketch_update.fleet import PARAM_N_SUB
 
         if packet is None:
             packet = pack_streams(streams, self.frag_order)
         assert packet.frag_order == self.frag_order
+        # Dead switches keep forwarding but no longer hold sketch
+        # memory: their segments become value-0 no-ops, their rows come
+        # out exactly zero, and the liveness registry masks them from
+        # every query path and from the §4.2 control (no record/PEB).
+        dead_set = set(dead or ()) & set(self.frag_order)
+        dead_pos = sorted(self._frag_pos[sw] for sw in dead_set)
+        if dead_pos:
+            packet = mask_fragment_values(packet, dead_pos)
         self._check_input_mass([packet])
         L = self.n_levels
         params = build_params(self.fragments, epoch, ns, self.frag_order)
@@ -673,6 +778,8 @@ class FleetEpochRunner:
         recs: Dict[int, EpochRecords] = {}
         pebs: Dict[int, float] = {}
         for i, sw in enumerate(self.frag_order):
+            if sw in dead_set:
+                continue      # no record, no PEB — matches the loop path
             cfg = self.fragments[sw]
             n = int(n_arr[i])
             counters = (stacked[i * L:(i + 1) * L, :n, :cfg.width].copy()
@@ -686,6 +793,15 @@ class FleetEpochRunner:
         # a stale resident buffer would silently answer queries with the
         # previous run's counters/seeds.
         self._window_bufs.pop(epoch, None)
+        self._lost.pop(epoch, None)
+        self._parity.pop(epoch, None)
+        if dead_pos:
+            live = np.ones(len(self.frag_order) * L, bool)
+            for i in dead_pos:
+                live[i * L:(i + 1) * L] = False
+            self._row_live[epoch] = live
+        else:
+            self._row_live.pop(epoch, None)
         if self.keep_stacked:
             self.stacked[epoch] = stacked
             self._params_log[epoch] = params
@@ -696,6 +812,8 @@ class FleetEpochRunner:
 
     def run_window(self, epoch0: int, ns: Dict[int, int],
                    packets: Sequence[FleetPacket],
+                   dead_by_epoch: Optional[Sequence[Sequence[int]]] = None,
+                   lost_by_epoch: Optional[Sequence[Sequence[int]]] = None,
                    ) -> Tuple[List[WindowRecords], List[Dict[int, float]]]:
         """Epoch-window super-dispatch: E epochs x F fragments in ONE
         kernel launch (E*F virtual param rows), ``ns`` frozen for the
@@ -705,6 +823,17 @@ class FleetEpochRunner:
         scalar) and the (E*F,) PEB vector cross the host boundary here;
         the full stack transfers lazily, once per window, when the query
         plane first touches a ``WindowRecords``.
+
+        Churn plumbing (both optional, per-epoch switch-id sets):
+        ``dead_by_epoch`` — switches holding no sketch memory during
+        that epoch; their packets become value-0 no-ops and their rows
+        are masked from queries/records/PEBs.  ``lost_by_epoch`` —
+        switches that DID sketch the epoch but whose counters were
+        reclaimed before the window export (a mid-window death loses its
+        earlier in-window epochs): their rows are zeroed *after* the
+        XOR parity of each configured group is computed, so a single
+        loss per group per epoch stays exactly reconstructible
+        (``recover``); until then the cells are masked like dead ones.
         """
         import jax.numpy as jnp
 
@@ -716,6 +845,16 @@ class FleetEpochRunner:
             assert packet.frag_order == self.frag_order
         if self.layout != "ragged":
             raise ValueError("window dispatch requires layout='ragged'")
+        fleet_set = set(self.frag_order)
+        dead_sets = [set(d) & fleet_set for d in dead_by_epoch] \
+            if dead_by_epoch is not None else [set()] * e_count
+        lost_sets = [set(s) & fleet_set for s in lost_by_epoch] \
+            if lost_by_epoch is not None else [set()] * e_count
+        assert len(dead_sets) == e_count and len(lost_sets) == e_count
+        if any(dead_sets):
+            packets = [mask_fragment_values(
+                p, sorted(self._frag_pos[sw] for sw in dead))
+                for p, dead in zip(packets, dead_sets)]
         self._check_input_mass(packets)
         n_frags = len(self.frag_order)
         L = self.n_levels
@@ -730,39 +869,103 @@ class FleetEpochRunner:
         out = self._dispatch(params, packets, n_sub_max, width_max)
         self._check_output_peak(
             float(jnp.max(jnp.abs(out))) if out.size else 0.0)
-        # §4.2 PEBs from the level-0 rows (::L is a no-op for cs/cms).
+        # §4.2 PEBs from the level-0 rows (::L is a no-op for cs/cms) —
+        # computed before lost cells are zeroed (their counters are
+        # genuine observations of epochs the switch did sketch).
         pebs_all = np.asarray(equalize.peb_fleet_device(
             out[::L], np.tile(n_arr, e_count), np.tile(self.widths, e_count),
             self.kind)).reshape(e_count, n_frags)
+        # XOR parity per (epoch, group) over the un-zeroed stack: exact
+        # integers below 2^24 make the f32->int32 conversion lossless,
+        # and XOR (unlike a sum) can neither overflow nor round.
+        parity_by_epoch = None
+        if self.parity_groups is not None:
+            parity_by_epoch = self._window_parity(
+                out, e_count, rows_per_epoch, n_sub_max, width_max)
+        if any(lost_sets):
+            rows = np.concatenate([
+                np.arange(i * L, (i + 1) * L) + e * rows_per_epoch
+                for e, lost in enumerate(lost_sets)
+                for i in sorted(self._frag_pos[sw] for sw in lost)]
+            ).astype(np.int64)
+            if isinstance(out, np.ndarray):
+                out[rows] = 0.0
+            else:
+                out = out.at[rows].set(0.0)
 
         buf = _WindowBuffer(out, (e_count, rows_per_epoch, n_sub_max,
                                   width_max))
         recs_list: List[WindowRecords] = []
         pebs_list: List[Dict[int, float]] = []
+        # snapshot the config dict: a later shrink must not re-slice
+        # this window's records with the new width
+        frags_now = dict(self.fragments)
         for e in range(e_count):
-            recs_list.append(WindowRecords(buf, e, epoch0 + e,
-                                           self.fragments, self.frag_order,
-                                           n_arr, n_levels=L))
+            ep = epoch0 + e
+            recs_list.append(WindowRecords(buf, e, ep, frags_now,
+                                           self.frag_order, n_arr,
+                                           n_levels=L))
             pebs_list.append({sw: float(pebs_all[e, i])
-                              for i, sw in enumerate(self.frag_order)})
+                              for i, sw in enumerate(self.frag_order)
+                              if sw not in dead_sets[e]})
             # Point/window queries are served straight from the resident
             # buffer (kernels.sketch_query) — no keep_stacked required,
             # and no eager host() transfer: forcing the transfer here is
             # exactly what window mode exists to avoid.  Host stacks
             # materialize lazily (``_host_stack``) only if something
             # transfers the buffer first.
-            self._window_bufs[epoch0 + e] = (buf, e)
-            self._params_log[epoch0 + e] = \
+            self._window_bufs[ep] = (buf, e)
+            self._params_log[ep] = \
                 params[e * rows_per_epoch:(e + 1) * rows_per_epoch]
             # drop any stale per-epoch retention from a previous run of
             # the same epoch — its counters pair with the OLD seeds
-            self.stacked.pop(epoch0 + e, None)
+            self.stacked.pop(ep, None)
+            self._lost.pop(ep, None)
+            self._parity.pop(ep, None)
+            if parity_by_epoch is not None:
+                self._parity[ep] = parity_by_epoch[e]
+            invalid = dead_sets[e] | lost_sets[e]
+            if invalid:
+                live = np.ones(rows_per_epoch, bool)
+                for sw in invalid:
+                    i = self._frag_pos[sw]
+                    live[i * L:(i + 1) * L] = False
+                self._row_live[ep] = live
+                self._lost[ep] = {self._frag_pos[sw]
+                                  for sw in lost_sets[e]}
+            else:
+                self._row_live.pop(ep, None)
         return recs_list, pebs_list
+
+    def _window_parity(self, out, e_count: int, rows_per_epoch: int,
+                       n_sub_max: int, width_max: int,
+                       ) -> List[List[np.ndarray]]:
+        """Per-epoch, per-group XOR parity over the group members' rows
+        of the (still possibly device-resident) window stack.  Returns
+        ``[epoch][group] -> (n_levels, n_sub_max, width_max)`` int32 on
+        host — total parity memory is one fragment-equivalent per group.
+        Dead members' rows are exact zeros and XOR away, so the parity
+        equation stays consistent for any liveness pattern."""
+        L = self.n_levels
+        a = out.reshape(e_count, rows_per_epoch, n_sub_max, width_max)
+        host = isinstance(out, np.ndarray)
+        if not host:
+            import jax.numpy as jnp
+        per_group = []
+        for g in self.parity_groups:
+            acc = None
+            for i in g:
+                cell = a[:, i * L:(i + 1) * L]
+                cell = cell.astype(np.int32 if host else jnp.int32)
+                acc = cell if acc is None else acc ^ cell
+            per_group.append(np.asarray(acc))   # (E, L, S, W) int32
+        return [[pg[e] for pg in per_group] for e in range(e_count)]
 
     def point_query(self, epoch: int, keys: np.ndarray,
                     path: Optional[Sequence[int]] = None,
                     level: int = 0,
-                    single_hop: bool = False) -> np.ndarray:
+                    single_hop: bool = False,
+                    failures: str = "mask") -> np.ndarray:
         """Batched epoch point-query over the retained stacked counters.
 
         ``path`` restricts the merge to the fragments the queried flows
@@ -774,9 +977,10 @@ class FleetEpochRunner:
         ``single_hop`` applies the §4.4 second-subepoch average on
         mitigation-enabled fragments (all queried keys must share it,
         which they do per path group: single-hop == path length 1).
+        ``failures`` is the churn query policy — see ``window_query``.
         """
         return self.window_query([epoch], keys, path=path, level=level,
-                                 single_hop=single_hop)
+                                 single_hop=single_hop, failures=failures)
 
     def has_device_window(self, epochs: Sequence[int]) -> bool:
         """True when every epoch's window stack is still device-resident,
@@ -795,6 +999,76 @@ class FleetEpochRunner:
             stack = buf.host()[e_idx]
             self.stacked[epoch] = stack
         return stack
+
+    def frag_live(self, epoch: int) -> Optional[np.ndarray]:
+        """(n_frags,) bool fragment liveness for a processed epoch, or
+        None when no failure touched it (every fragment live)."""
+        live = self._row_live.get(epoch)
+        return None if live is None else live[::self.n_levels]
+
+    def recoverable(self, epochs: Optional[Sequence[int]] = None,
+                    ) -> Dict[int, List[int]]:
+        """The lost cells XOR parity can reconstruct: {epoch: [switch]}.
+
+        A lost (epoch, fragment) cell is recoverable iff the fragment
+        belongs to a parity group, the epoch's parity was captured, and
+        no OTHER member of its group is lost at that epoch (dead-all-
+        epoch members hold exact-zero rows and XOR away, so they do not
+        block recovery — only a second *loss* does)."""
+        out: Dict[int, List[int]] = {}
+        for e in (sorted(self._lost) if epochs is None else epochs):
+            lost = self._lost.get(e)
+            if not lost or e not in self._parity:
+                continue
+            for i in sorted(lost):
+                gi = self._group_of.get(i)
+                if gi is None:
+                    continue
+                if any(j != i and j in lost for j in self.parity_groups[gi]):
+                    continue
+                out.setdefault(e, []).append(self.frag_order[i])
+        return out
+
+    def recover(self, epochs: Optional[Sequence[int]] = None,
+                ) -> Dict[int, List[int]]:
+        """Reconstruct every recoverable lost cell from XOR parity and
+        patch it back into the window stack, in place.
+
+        For a lost fragment ``i`` of group ``G`` at epoch ``e``:
+        ``C_i = parity[e][G] XOR (XOR of the surviving members' rows)``
+        — exact (counters are exact integers; XOR neither overflows nor
+        rounds), so the round trip is bit-identical to the counters the
+        switch held before the reclaim.  Recovered rows flip back to
+        live: subsequent masked queries and the record plane use the
+        reconstruction as if the fragment had exported normally.
+        Returns {epoch: [switch]} of what was actually recovered;
+        unrecoverable cells (no group / double loss) stay masked.
+        """
+        recovered: Dict[int, List[int]] = {}
+        L = self.n_levels
+        for e, sws in self.recoverable(epochs).items():
+            buf, e_idx = self._window_bufs[e]
+            live = self._row_live[e]
+            lost = self._lost[e]
+            parity = self._parity[e]
+            stack_e = buf.epoch_view(e_idx)     # (R, S, W) host
+            patches = []
+            for sw in sws:
+                i = self._frag_pos[sw]
+                gi = self._group_of[i]
+                acc = parity[gi].copy()         # (L, S, W) int32
+                for j in self.parity_groups[gi]:
+                    if j != i:
+                        acc ^= np.asarray(
+                            stack_e[j * L:(j + 1) * L]).astype(np.int32)
+                patches.append((i, acc))
+            for i, counters in patches:
+                buf.patch(e_idx, i * L, (i + 1) * L,
+                          counters.astype(np.int64))
+                live[i * L:(i + 1) * L] = True
+                lost.discard(i)
+                recovered.setdefault(e, []).append(self.frag_order[i])
+        return recovered
 
     def _row_sel(self, path: Optional[Sequence[int]],
                  level: int) -> Optional[np.ndarray]:
@@ -848,10 +1122,48 @@ class FleetEpochRunner:
             device_groups.append((stack, es))
         return device_groups, host_epochs
 
+    def _liveness_sels(self, epochs: Sequence[int],
+                       base: Optional[np.ndarray], failures: str):
+        """Shared churn-masking front end for the window-query entry
+        points: intersect the structural row selection with per-epoch
+        liveness, drop epochs with zero on-path survivors (blind
+        epochs), and return ``(epochs, sel_by_epoch, scale)``.
+
+        ``sel_by_epoch`` is None when no queried epoch was touched by a
+        failure (the original uniform-selection fast path).  ``scale``
+        is the §4.3-style blind-spot extrapolation factor E/E_observable
+        — unobservable epochs take the mean of the observable ones.
+        Raises ``ValueError`` when the policy is unknown or every epoch
+        is blind (the flow is unobservable under the failure schedule).
+        """
+        if failures not in ("oblivious", "mask", "recover"):
+            raise ValueError(f"unknown failures policy {failures!r}; "
+                             "expected 'oblivious', 'mask' or 'recover'")
+        if failures == "recover":
+            self.recover(epochs)
+            failures = "mask"
+        if failures != "mask" or not any(e in self._row_live
+                                         for e in epochs):
+            return list(epochs), None, 1.0
+        n_rows = len(self.frag_order) * self.n_levels
+        base_arr = np.ones(n_rows, bool) if base is None else base
+        sel_by_e = {e: base_arr & live
+                    if (live := self._row_live.get(e)) is not None
+                    else base_arr
+                    for e in epochs}
+        obs = [e for e in epochs if sel_by_e[e].any()]
+        if not obs:
+            raise ValueError(
+                "window query: no epoch in the window has a live "
+                "on-path fragment — the flow is unobservable under the "
+                "failure schedule")
+        return obs, sel_by_e, len(epochs) / len(obs)
+
     def window_query(self, epochs: Sequence[int], keys: np.ndarray,
                      path: Optional[Sequence[int]] = None,
                      level: int = 0,
-                     single_hop: bool = False) -> np.ndarray:
+                     single_hop: bool = False,
+                     failures: str = "mask") -> np.ndarray:
         """Batched point-query summed over a query window (O_Q = Sum(O))
         — the fleet twin of ``query.query_window(merge="fragment")``.
 
@@ -870,29 +1182,45 @@ class FleetEpochRunner:
         answer (level 0 = frequency queries); ``single_hop`` enables the
         §4.4 second-subepoch average on mitigation rows (uniform per
         call — query_flows passes it per path group).
+
+        ``failures`` is the churn query policy: ``"mask"`` (default)
+        intersects the on-path selection with each epoch's fragment
+        liveness — a dead/lost fragment never enters the merge, and
+        blind epochs (zero on-path survivors) are extrapolated from the
+        observable ones; ``"recover"`` first reconstructs recoverable
+        lost cells from XOR parity (``recover``), then masks whatever
+        remains; ``"oblivious"`` ignores liveness — the failure-unaware
+        baseline whose min/median is poisoned by the dead rows' zeros.
+        With no failures in the queried epochs all three are identical.
         """
         from . import query as Q
 
         keys = np.asarray(keys, np.uint32)
-        frag_sel = self._row_sel(path, level)
+        base = self._row_sel(path, level)
+        epochs, sel_by_e, scale = self._liveness_sels(epochs, base,
+                                                      failures)
         device_groups, host_epochs = self._route_epochs(epochs)
         out = np.zeros(len(keys))
         for stack, es in device_groups:
+            sel = base if sel_by_e is None else \
+                np.stack([sel_by_e[e] for e in es])
             out += Q.fleet_query_window_device(
                 stack, [self._params_log[e] for e in es], keys, self.kind,
-                frag_sel=frag_sel, single_hop=single_hop)
+                frag_sel=sel, single_hop=single_hop)
         if host_epochs:
+            sel = base if sel_by_e is None else \
+                [sel_by_e[e] for e in host_epochs]
             out += Q.fleet_query_window(
                 [self._host_stack(e) for e in host_epochs],
                 [self._params_log[e] for e in host_epochs],
-                self.row_widths, keys, self.kind, frag_sel=frag_sel,
+                None, keys, self.kind, frag_sel=sel,
                 single_hop=single_hop)
-        return out
+        return out * scale if scale != 1.0 else out
 
     def um_level_window_query(self, epochs: Sequence[int],
                               keys: np.ndarray,
                               path: Optional[Sequence[int]] = None,
-                              ) -> np.ndarray:
+                              failures: str = "mask") -> np.ndarray:
         """All ``n_levels`` UnivMon Count-Sketch window estimates for a
         key batch in one batched call — the per-level inputs of the
         §6.2 G-sum/entropy estimators.
@@ -904,7 +1232,9 @@ class FleetEpochRunner:
         gather/merge over the still-resident stack
         (``query.um_fleet_query_window_device``); host-materialized
         epochs fall back to per-level numpy queries.  Both paths mix
-        freely per epoch, as in ``window_query``.
+        freely per epoch, as in ``window_query``; ``failures`` is the
+        same churn query policy (liveness is per *fragment* — a dead
+        switch masks all its level rows at once).
         """
         from . import query as Q
 
@@ -914,16 +1244,27 @@ class FleetEpochRunner:
         if path is not None:
             on_path = set(path)
             frag_sel = np.array([sw in on_path for sw in self.frag_order])
+        # Liveness intersection in ROW space (shared helper), projected
+        # back to fragment space for the device um path — level rows of
+        # one fragment are all-live or all-masked together.
+        row_base = None if frag_sel is None \
+            else np.repeat(frag_sel, self.n_levels)
+        epochs, row_sel_by_e, scale = self._liveness_sels(
+            epochs, row_base, failures)
         device_groups, host_epochs = self._route_epochs(epochs)
         out = np.zeros((self.n_levels, len(keys)))
         for stack, es in device_groups:
+            sel = frag_sel if row_sel_by_e is None else \
+                np.stack([row_sel_by_e[e][::self.n_levels] for e in es])
             out += Q.um_fleet_query_window_device(
                 stack, [self._params_log[e] for e in es], keys,
-                self.n_levels, frag_sel=frag_sel)
+                self.n_levels, frag_sel=sel)
         for level in range(self.n_levels) if host_epochs else ():
+            lvl_rows = self.row_levels == level
+            sel = self._row_sel(path, level) if row_sel_by_e is None else \
+                [row_sel_by_e[e] & lvl_rows for e in host_epochs]
             out[level] += Q.fleet_query_window(
                 [self._host_stack(e) for e in host_epochs],
                 [self._params_log[e] for e in host_epochs],
-                self.row_widths, keys, "um",
-                frag_sel=self._row_sel(path, level))
-        return out
+                None, keys, "um", frag_sel=sel)
+        return out * scale if scale != 1.0 else out

@@ -166,6 +166,11 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
     keys = np.asarray(keys, dtype=np.uint32)
     if frag_sel is not None:
         frag_sel = np.asarray(frag_sel, bool)
+        if not frag_sel.any():
+            raise ValueError(
+                "fleet_query_epoch: frag_sel selects no rows — an "
+                "all-masked merge has no survivor; drop the epoch "
+                "(blind-epoch extrapolation) or widen the selection")
         stacked = stacked[frag_sel]
         col_seeds = np.asarray(col_seeds)[frag_sel]
         sign_seeds = np.asarray(sign_seeds)[frag_sel]
@@ -199,8 +204,9 @@ def fleet_query_epoch(stacked: np.ndarray, col_seeds: np.ndarray,
 
 def fleet_query_window(stacked_by_epoch: Sequence[np.ndarray],
                        params_by_epoch: Sequence[np.ndarray],
-                       widths: np.ndarray, keys: np.ndarray, kind: str,
-                       frag_sel: Optional[np.ndarray] = None,
+                       widths: Optional[np.ndarray], keys: np.ndarray,
+                       kind: str,
+                       frag_sel=None,
                        single_hop: bool = False) -> np.ndarray:
     """Window point-query over fleet stacks: O_Q = Sum(O) of per-epoch
     batched queries — the fleet twin of ``query_window`` with
@@ -208,24 +214,48 @@ def fleet_query_window(stacked_by_epoch: Sequence[np.ndarray],
 
     ``params_by_epoch`` carries each epoch's ``(n_rows, N_PARAMS)``
     fleet parameter table (seeds are per-epoch, so the table differs
-    every epoch even for a static fleet); ``frag_sel`` restricts every
-    epoch's merge to the on-path rows, and ``single_hop`` applies the
-    §4.4 average on ``PARAM_MIT`` rows, as in ``fleet_query_epoch``.
+    every epoch even for a static fleet); ``widths=None`` reads each
+    epoch's hash moduli from its own parameter table (required when a
+    resource-reclaim shrink changed a fragment's width mid-replay);
+    ``frag_sel`` restricts every epoch's merge to the on-path rows —
+    either one (n_rows,) mask for the whole window, or a sequence /
+    (E, n_rows) array of per-epoch masks (fragment liveness under
+    churn); ``single_hop`` applies the §4.4 average on ``PARAM_MIT``
+    rows, as in ``fleet_query_epoch``.
     """
     from ..kernels.sketch_update import fleet as FK
 
     keys = np.asarray(keys, dtype=np.uint32)
     out = np.zeros(len(keys))
-    for stacked, p in zip(stacked_by_epoch, params_by_epoch):
+    sels = _per_epoch_sels(frag_sel, len(params_by_epoch))
+    for stacked, p, sel in zip(stacked_by_epoch, params_by_epoch, sels):
         out += fleet_query_epoch(
             stacked,
             col_seeds=p[:, FK.PARAM_COL_SEED].astype(np.int64),
             sign_seeds=p[:, FK.PARAM_SIGN_SEED].astype(np.int64),
             sub_seeds=p[:, FK.PARAM_SUB_SEED].astype(np.int64),
             ns=p[:, FK.PARAM_N_SUB].astype(np.int64),
-            widths=widths, keys=keys, kind=kind, frag_sel=frag_sel,
+            widths=p[:, FK.PARAM_WIDTH].astype(np.int64)
+            if widths is None else widths,
+            keys=keys, kind=kind, frag_sel=sel,
             mit=p[:, FK.PARAM_MIT] != 0, single_hop=single_hop)
     return out
+
+
+def _per_epoch_sels(frag_sel, n_epochs: int) -> List:
+    """Normalize a window ``frag_sel`` to one mask per epoch: accepts
+    None, a single (n_rows,) mask, or per-epoch masks as an (E, n_rows)
+    array / sequence of E masks."""
+    if frag_sel is None:
+        return [None] * n_epochs
+    if isinstance(frag_sel, np.ndarray) and frag_sel.ndim == 1:
+        return [frag_sel] * n_epochs
+    sels = list(frag_sel)
+    if len(sels) != n_epochs:
+        raise ValueError(
+            f"per-epoch frag_sel has {len(sels)} masks for "
+            f"{n_epochs} epochs")
+    return sels
 
 
 def fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,

@@ -105,15 +105,24 @@ def _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
 
 def _masked_merge(raw, frag_sel, *, kind: str):
     """§4.3 merge across the row axis (axis 1) with the on-path
-    selection passed as data: min for CMS, masked median otherwise."""
-    masked = jnp.where(frag_sel[None, :, None], raw, jnp.inf)
+    selection passed as data: min for CMS, masked median otherwise.
+
+    ``frag_sel`` is (R,) for a window-uniform selection, or (E, R) when
+    the on-path set differs per epoch (fragment churn: a switch that
+    dies mid-window is live for some epochs and masked for the rest).
+    Every epoch must keep at least one selected row — the entry points
+    raise before tracing otherwise (an all-masked epoch would min/median
+    over +inf and poison the window sum).
+    """
+    sel = frag_sel if frag_sel.ndim == 2 else frag_sel[None, :]
+    masked = jnp.where(sel[:, :, None], raw, jnp.inf)
     if kind == "cms":
         return jnp.min(masked, axis=1)                    # (E, K)
     # Masked median: +inf-masked entries sort to the top, so ranks
     # (m-1)//2 and m//2 of the ascending sort are the two middle
-    # *selected* values (m = number of on-path rows).
+    # *selected* values (m = number of on-path rows in that epoch).
     srt = jnp.sort(masked, axis=1)
-    m = jnp.sum(frag_sel).astype(jnp.int32)
+    m = jnp.sum(sel, axis=1).astype(jnp.int32)[:, None, None]  # (E', 1, 1)
     shape = (srt.shape[0], 1, srt.shape[2])
     lo = jnp.take_along_axis(srt, jnp.broadcast_to((m - 1) // 2, shape),
                              axis=1)
@@ -130,9 +139,10 @@ def _gather_merge(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
 
     ``col_seeds``/``sign_seeds``/``sub_seeds`` are (E, R) uint32 (seeds
     are per-epoch); ``ns``/``widths`` are (R,) int32 (frozen across the
-    window — the ``run_window`` contract); ``frag_sel``/``mit_rows`` are
-    (R,) bool.  Passing the selection as data (rather than slicing rows
-    out) keeps the compiled shape independent of the queried path.
+    window — the ``run_window`` contract); ``frag_sel`` is (R,) bool, or
+    (E, R) when liveness differs per epoch; ``mit_rows`` is (R,) bool.
+    Passing the selection as data (rather than slicing rows out) keeps
+    the compiled shape independent of the queried path.
     """
     raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
                       mit_rows, keys, signed=kind in ("cs", "um"),
@@ -172,7 +182,12 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
       keys: (K,) uint32 key batch.
       kind: "cs" | "cms" | "um" (um rows are signed CS levels; pass the
         queried level's rows via ``frag_sel``).
-      frag_sel: optional (R,) bool on-path row mask (§4.3 Step 1).
+      frag_sel: optional (R,) bool on-path row mask (§4.3 Step 1), or
+        (E, R) when the selection differs per epoch (fragment liveness
+        under churn).  Every epoch must select at least one row —
+        raises ``ValueError`` otherwise; an all-masked epoch has no
+        survivor to merge and would silently return an inf-poisoned
+        (cms) or padded-rank (cs) estimate.
       single_hop: apply the §4.4 second-subepoch average on PARAM_MIT
         rows (the queried flows are single-hop — uniform per path
         group).
@@ -188,7 +203,16 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     if frag_sel is None:
         frag_sel = np.ones(n_rows, bool)
     frag_sel = np.asarray(frag_sel, bool)
-    if n_keys == 0 or n_rows == 0 or not frag_sel.any():
+    sel2 = np.atleast_2d(frag_sel)
+    if not sel2.any(axis=1).all():
+        bad = np.flatnonzero(~sel2.any(axis=1))
+        raise ValueError(
+            "fleet_window_query_device: no on-path fragment selected "
+            f"(epoch offsets {bad.tolist()} of {len(params_by_epoch)}) — "
+            "an all-masked merge has no survivor and would poison the "
+            "window sum; drop these epochs (blind-epoch extrapolation) "
+            "or widen the selection")
+    if n_keys == 0:
         return np.zeros(n_keys)
     mit_rows = params[0, :, PARAM_MIT] != 0
     mitigate = bool(single_hop) and bool(mit_rows.any())
@@ -231,6 +255,10 @@ def _gather_merge_um(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
     raw = (raw.reshape(e_count, n_frags, n_levels, -1)
            .transpose(0, 2, 1, 3)
            .reshape(e_count * n_levels, n_frags, -1))
+    if frag_sel.ndim == 2:
+        # per-epoch liveness: expand (E, F) to the (E*L, F) row layout
+        # (epoch-major, level within — matches the reshape above)
+        frag_sel = jnp.repeat(frag_sel, n_levels, axis=0)
     merged = _masked_merge(raw, frag_sel, kind="um")      # (E*L, K)
     return merged.reshape(e_count, n_levels, -1).sum(axis=0)  # (L, K)
 
@@ -249,7 +277,9 @@ def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
         per-level mixed seeds (``core.fleet.build_params``).
       keys: (K,) uint32 key batch.
       frag_sel: optional (F,) bool on-path *fragment* mask — the level
-        selection is structural here, not a mask.
+        selection is structural here, not a mask.  May be (E, F) when
+        fragment liveness differs per epoch; every epoch must keep at
+        least one selected fragment (raises ``ValueError`` otherwise).
 
     Returns (n_levels, K) float64 ``merge="fragment"`` window estimates;
     level ``l``'s row is meaningful for keys with ``level_of >= l`` (the
@@ -266,7 +296,15 @@ def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     if frag_sel is None:
         frag_sel = np.ones(n_frags, bool)
     frag_sel = np.asarray(frag_sel, bool)
-    if n_keys == 0 or n_frags == 0 or not frag_sel.any():
+    sel2 = np.atleast_2d(frag_sel)
+    if not sel2.any(axis=1).all():
+        bad = np.flatnonzero(~sel2.any(axis=1))
+        raise ValueError(
+            "um_window_query_device: no on-path fragment selected "
+            f"(epoch offsets {bad.tolist()} of {len(params_by_epoch)}) — "
+            "an all-masked merge has no survivor; drop these epochs or "
+            "widen the selection")
+    if n_keys == 0:
         return np.zeros((n_levels, n_keys))
     kb = key_bucket(n_keys)
     keys_pad = np.zeros(kb, np.uint32)

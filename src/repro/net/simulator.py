@@ -8,12 +8,129 @@ so subepoch semantics are exact).  Drives any system exposing
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.disketch import SwitchStream
+from ..runtime.fault_tolerance import HeartbeatMonitor
 from .traffic import Workload
+
+
+@dataclass(frozen=True)
+class FailureEvent:
+    """One churn event, consumed by ``DiSketchSystem.apply_event``.
+
+    ``kind``: "fail" (sketch resource reclaimed — the switch keeps
+    forwarding), "recover" (resource returned; the fragment restarts
+    fresh at n_0 = 1), or "shrink" (memory multiplied by ``factor``).
+    """
+    epoch: int
+    switch: int
+    kind: str
+    factor: float = 1.0
+
+
+class _EpochClock:
+    """Injectable clock stepping ``epoch_s`` seconds per replay epoch."""
+
+    def __init__(self, epoch_s: float):
+        self.epoch_s = epoch_s
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+class FailureSchedule:
+    """Scripted switch churn, *detected* through a heartbeat monitor.
+
+    The schedule holds the ground truth — ``downs[sw] = (down_epoch,
+    up_epoch | None)`` plus scripted resource-reclaim shrinks — but the
+    events it emits are what the control plane can actually observe:
+    each ``advance(epoch)`` steps the injectable clock by ``epoch_s``,
+    beats every up switch into a ``runtime.fault_tolerance.
+    HeartbeatMonitor``, and derives "fail"/"recover" events from the
+    monitor's timeout transitions.  With the default ``timeout_s =
+    0.75 * epoch_s`` a death is detected in the first epoch the switch
+    misses (one full silent epoch > timeout), so masking aligns with
+    ground truth; a larger timeout models detection lag — the epochs
+    before detection stay unmasked, exactly as a real deployment would
+    mis-trust them.
+
+    Deterministic and replayable: the clock is owned by the schedule
+    (or injected for tests), never wall time.
+    """
+
+    def __init__(self, n_switches: int,
+                 downs: Optional[Dict[int, Tuple[int, Optional[int]]]] = None,
+                 shrinks: Optional[Sequence[Tuple[int, int, float]]] = None,
+                 *, epoch_s: float = 1.0,
+                 timeout_s: Optional[float] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        self.n_switches = n_switches
+        self.downs: Dict[int, Tuple[int, Optional[int]]] = dict(downs or {})
+        for sw, (d, u) in self.downs.items():
+            if not 0 <= sw < n_switches:
+                raise ValueError(f"switch {sw} out of range "
+                                 f"[0, {n_switches})")
+            if u is not None and u <= d:
+                raise ValueError(f"switch {sw}: up epoch {u} must follow "
+                                 f"down epoch {d}")
+        self._shrinks: Dict[int, List[FailureEvent]] = {}
+        for ep, sw, factor in (shrinks or ()):
+            if not 0.0 < factor <= 1.0:
+                raise ValueError(f"shrink factor {factor} not in (0, 1]")
+            self._shrinks.setdefault(int(ep), []).append(
+                FailureEvent(int(ep), int(sw), "shrink", float(factor)))
+        self.epoch_s = epoch_s
+        self._clock = clock if clock is not None else _EpochClock(epoch_s)
+        self._own_clock = clock is None
+        self.monitor = HeartbeatMonitor(
+            n_switches,
+            timeout_s=0.75 * epoch_s if timeout_s is None else timeout_s,
+            clock=self._clock)
+        self._known_dead: set = set()
+        self.log: List[FailureEvent] = []
+
+    def is_up(self, sw: int, epoch: int) -> bool:
+        """Ground truth (the monitor may not have detected it yet)."""
+        d_u = self.downs.get(sw)
+        if d_u is None:
+            return True
+        d, u = d_u
+        return epoch < d or (u is not None and epoch >= u)
+
+    def advance(self, epoch: int) -> List[FailureEvent]:
+        """Emit the churn events *detected* at ``epoch``'s start."""
+        if self._own_clock:
+            self._clock.t = epoch * self.epoch_s
+        for sw in range(self.n_switches):
+            if self.is_up(sw, epoch):
+                self.monitor.beat(sw)
+        failed = self.monitor.failed_hosts()
+        events: List[FailureEvent] = []
+        for sw in sorted(failed - self._known_dead):
+            events.append(FailureEvent(epoch, sw, "fail"))
+        for sw in sorted(self._known_dead - failed):
+            events.append(FailureEvent(epoch, sw, "recover"))
+        self._known_dead = set(failed)
+        events.extend(self._shrinks.get(epoch, ()))
+        self.log.extend(events)
+        return events
+
+    @classmethod
+    def random(cls, n_switches: int, frac_failed: float, *,
+               down_epoch: int, up_epoch: Optional[int] = None,
+               seed: int = 0, **kw) -> "FailureSchedule":
+        """Kill a random ``frac_failed`` of the switches at
+        ``down_epoch`` (optionally recovering at ``up_epoch``)."""
+        rng = np.random.default_rng(seed)
+        k = int(round(frac_failed * n_switches))
+        victims = rng.choice(n_switches, size=k, replace=False)
+        downs = {int(sw): (down_epoch, up_epoch) for sw in victims}
+        return cls(n_switches, downs, **kw)
 
 
 class Replayer:
@@ -55,27 +172,37 @@ class Replayer:
                     single_hop=single_hop_flow[wl.pkt_flow[sl]],
                 )
 
-    def run(self, system, window: int = 1) -> None:
+    def run(self, system, window: int = 1,
+            failures: Optional[FailureSchedule] = None) -> None:
         # Fleet-backed systems consume the cached packed packet tensor
         # (built once per epoch, shared across systems and replays).
         # ``window=E`` batches E consecutive epochs into one fleet
         # super-dispatch (``system.run_window``; ns frozen per window).
+        # ``failures`` advances a churn schedule alongside the replay
+        # and injects the detected events into the system.
         fleet = getattr(system, "fleet", None)
         if window > 1 and fleet is not None:
             for e0 in range(0, self.wl.n_epochs, window):
                 eps = range(e0, min(e0 + window, self.wl.n_epochs))
+                kw = {}
+                if failures is not None:
+                    kw["events_by_epoch"] = [failures.advance(e)
+                                             for e in eps]
                 system.run_window(
                     e0, [self._streams[e] for e in eps],
                     packets=[self.epoch_packet(e, fleet.frag_order)
-                             for e in eps])
+                             for e in eps], **kw)
             return
         for ep in range(self.wl.n_epochs):
+            kw = {}
+            if failures is not None:
+                kw["events"] = failures.advance(ep)
             if fleet is not None:
                 system.run_epoch(ep, self._streams[ep],
                                  packet=self.epoch_packet(
-                                     ep, fleet.frag_order))
+                                     ep, fleet.frag_order), **kw)
             else:
-                system.run_epoch(ep, self._streams[ep])
+                system.run_epoch(ep, self._streams[ep], **kw)
 
     def epoch_stream(self, epoch: int) -> Dict[int, SwitchStream]:
         return self._streams[epoch]

@@ -51,6 +51,9 @@ class HeartbeatMonitor:
         self._last: Dict[int, float] = {h: now for h in range(n_hosts)}
 
     def beat(self, host: int) -> None:
+        if not 0 <= host < self.n_hosts:
+            raise ValueError(
+                f"host {host} out of range [0, {self.n_hosts})")
         self._last[host] = self.clock()
 
     def failed_hosts(self) -> Set[int]:
@@ -135,9 +138,14 @@ class StragglerPolicy:
 
     def observe(self, step_times: Dict[int, float]) -> Set[int]:
         """Feed per-host step durations; returns hosts to quarantine now."""
-        if not step_times:
+        # The median must be taken over non-quarantined hosts only: a
+        # quarantined slow host left in the sample drags the median up and
+        # shields every other straggler from the threshold test.
+        active = [t for h, t in step_times.items()
+                  if h not in self.quarantined]
+        if not active:
             return set()
-        med = float(np.median(list(step_times.values())))
+        med = float(np.median(active))
         newly = set()
         for h, t in step_times.items():
             if h in self.quarantined:

@@ -47,10 +47,79 @@ def test_elastic_mesh_drops_rows():
 
 
 def test_elastic_mesh_no_rows_raises():
-    em = ElasticMesh(pod=1, data=2, model=4, devices_per_host=4)
+    em = ElasticMesh(pod=1, data=2, model=8, devices_per_host=4)
+    # each row needs 2 hosts; host 0 alone cannot complete row 0
     with pytest.raises(RuntimeError):
-        em.plan([0])  # each row needs 1 host; only host 0 healthy of row 0
+        em.plan([0])
+    with pytest.raises(RuntimeError):
         em.plan([])
+
+
+def test_elastic_mesh_partial_pod_falls_back_to_flat():
+    em = ElasticMesh(pod=2, data=2, model=4, devices_per_host=4)
+    # pod 1 half-degraded: whole-pod grouping would keep only pod 0's
+    # 2 rows; the flat mesh keeps all 3 healthy rows
+    healthy = [h for h in range(em.n_hosts) if h != 3]
+    plan = em.plan(healthy)
+    assert plan.shape == (3, 4)
+    assert plan.axis_names == ("data", "model")
+    assert 3 not in plan.hosts
+
+
+def test_elastic_mesh_single_surviving_row():
+    em = ElasticMesh(pod=2, data=2, model=4, devices_per_host=4)
+    plan = em.plan([2])                     # only row 2 intact
+    assert plan.shape == (1, 4)
+    assert plan.hosts == (2,)
+
+
+def test_heartbeat_beat_rejects_out_of_range():
+    mon = HeartbeatMonitor(4, timeout_s=10, clock=Clock())
+    with pytest.raises(ValueError, match="out of range"):
+        mon.beat(4)
+    with pytest.raises(ValueError, match="out of range"):
+        mon.beat(-1)
+    mon.beat(0)
+    mon.beat(3)
+
+
+def test_straggler_median_excludes_quarantined():
+    # Regression: with 2-of-4 hosts quarantined slow, the median over
+    # *all* reported times would sit between slow and fast and shield a
+    # third straggler from the threshold test forever.
+    pol = StragglerPolicy(threshold=1.5, patience=1)
+    assert pol.observe({0: 9.0, 1: 9.0, 2: 1.0, 3: 1.0, 4: 1.0}) == {0, 1}
+    # host 2 turns slow; active median is 1.0 (hosts 2..4), so 4.0
+    # trips the threshold even though the all-host median would be 4.0
+    assert pol.observe({0: 9.0, 1: 9.0, 2: 4.0, 3: 1.0, 4: 1.0}) == {2}
+
+
+def test_straggler_all_quarantined_observe_is_noop():
+    pol = StragglerPolicy(threshold=1.5, patience=1)
+    assert pol.observe({0: 9.0, 1: 1.0, 2: 1.0}) == {0}
+    assert pol.observe({0: 9.0}) == set()   # no active host: no signal
+
+
+def test_straggler_readmit_resets_streak():
+    pol = StragglerPolicy(threshold=1.5, patience=2)
+    slow = {0: 5.0, 1: 1.0, 2: 1.0}
+    assert pol.observe(slow) == set()       # streak 1
+    pol.readmit(0)                          # also clears the streak
+    assert pol.observe(slow) == set()       # streak restarts at 1
+    assert pol.observe(slow) == {0}
+
+
+def test_supervisor_restart_budget_exhaustion():
+    clk = Clock()
+    em = ElasticMesh(pod=1, data=4, model=4, devices_per_host=4)
+    mon = HeartbeatMonitor(em.n_hosts, timeout_s=1e9, clock=clk)
+    sup = TrainingSupervisor(em, mon, ckpt_every=10, max_restarts=2)
+
+    def step_fn(step, plan):
+        raise RuntimeError("collective timeout")
+
+    with pytest.raises(RuntimeError, match="collective timeout"):
+        sup.run(40, step_fn, lambda s: None, lambda: 0)
 
 
 def test_straggler_quarantine_and_readmit():

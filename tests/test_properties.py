@@ -161,6 +161,53 @@ def test_bf16_value_modes_bit_identical(width, n_sub, signed, vmax, seed):
         np.testing.assert_array_equal(got, ref, err_msg=f"mode={mode}")
 
 
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**12 - 1),          # (E=2) x (F=6) liveness bitmask
+       st.sampled_from(["cs", "cms"]),
+       st.integers(0, 2**31 - 1))
+def test_masked_merge_matches_numpy_oracle(mask_bits, kind, seed):
+    """The device ``_masked_merge`` under ANY per-epoch fragment mask —
+    odd or even survivor counts (cs masked median), any survivor subset
+    (cms masked min) — matches the numpy oracle on the survivors; an
+    epoch with no survivor fails loudly.  Shapes are fixed so the jit
+    cache holds one compile per kind."""
+    from repro.kernels.sketch_query import fleet_window_query_device
+    from repro.kernels.sketch_update import fleet as FK
+
+    e_count, n_frags, n_sub, width = 2, 6, 4, 256
+    sel = np.array([(mask_bits >> i) & 1 for i in range(e_count * n_frags)],
+                   bool).reshape(e_count, n_frags)
+    rng = np.random.RandomState(seed % 2**31)
+    stack = rng.randint(-200, 200,
+                        (e_count, n_frags, n_sub, width)).astype(np.float32)
+    if kind == "cms":
+        stack = np.abs(stack)
+    params = np.zeros((e_count, n_frags, FK.N_PARAMS), np.int32)
+    for e in range(e_count):
+        for f in range(n_frags):
+            params[e, f, FK.PARAM_COL_SEED] = 11 + 17 * e + f
+            params[e, f, FK.PARAM_SIGN_SEED] = 22 + 17 * e + f
+            params[e, f, FK.PARAM_SUB_SEED] = 33 + 17 * e + f
+            params[e, f, FK.PARAM_WIDTH] = width
+            params[e, f, FK.PARAM_N_SUB] = n_sub
+            params[e, f, FK.PARAM_LOG2_N_SUB] = 2
+    keys = rng.randint(0, 1 << 20, 16).astype(np.uint32)
+    if not sel.any(axis=1).all():
+        with pytest.raises(ValueError, match="no on-path fragment"):
+            fleet_window_query_device(stack, list(params), keys, kind,
+                                      frag_sel=sel)
+        return
+    got = fleet_window_query_device(stack, list(params), keys, kind,
+                                    frag_sel=sel)
+    widths = np.full(n_frags, width, np.int64)
+    ref = sum(Q.fleet_query_epoch(
+        stack[e], params[e, :, FK.PARAM_COL_SEED],
+        params[e, :, FK.PARAM_SIGN_SEED], params[e, :, FK.PARAM_SUB_SEED],
+        params[e, :, FK.PARAM_N_SUB].astype(np.int64), widths, keys,
+        kind, frag_sel=sel[e]) for e in range(e_count))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
 @settings(deadline=None, max_examples=15)
 @given(st.integers(100, 100000), st.sampled_from([1, 2, 4, 8, 16, 64]),
        st.sampled_from(["count", "limb", "f32"]))

@@ -249,7 +249,8 @@ def test_engine_masked_merge_matches_numpy(kind):
             params[e, :, FK.PARAM_N_SUB].astype(np.int64), widths, keys,
             kind, frag_sel=sel) for e in range(e_count))
         np.testing.assert_allclose(got, ref, rtol=RTOL)
-    # no on-path fragments: defined as zero, no device work
-    zero = fleet_window_query_device(stack, list(params), keys, kind,
-                                     frag_sel=np.zeros(n_frags, bool))
-    np.testing.assert_array_equal(zero, np.zeros(len(keys)))
+    # no on-path fragments must fail loudly (an all-masked epoch is a
+    # liveness bug upstream, not a zero estimate)
+    with pytest.raises(ValueError, match="fragment"):
+        fleet_window_query_device(stack, list(params), keys, kind,
+                                  frag_sel=np.zeros(n_frags, bool))

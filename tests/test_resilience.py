@@ -1,0 +1,374 @@
+"""Failure/churn-injection suite: seeded schedules, fragment liveness,
+masking, XOR-parity recovery, and §6 re-equalization.
+
+The failure model follows the disaggregation premise: a "dead" switch
+keeps forwarding packets — only its *sketch resource* is reclaimed, so
+it stops counting.  Masking must therefore leave the survivors'
+counters bit-identical to a run where the victim never existed on the
+path; parity recovery must reconstruct a single lost fragment's
+counters exactly (XOR over int32-cast f32 counters is lossless under
+the |c| < 2^24 exactness contract).
+"""
+import numpy as np
+import pytest
+
+from repro.core import equalize, query
+from repro.core.disketch import (AggregatedSystem, DiSketchSystem,
+                                 SwitchStream)
+from repro.core.fleet import parity_groups_chunked
+from repro.net.simulator import FailureEvent, FailureSchedule
+
+SW = 6
+LOG2_TE = 10
+MEMS = {sw: 256 for sw in range(SW)}
+
+
+def streams_for(epoch, seed, n_pkts=200, n_keys=50):
+    r = np.random.default_rng(seed)
+    out = {}
+    for sw in range(SW):
+        keys = r.integers(0, n_keys, n_pkts).astype(np.uint32)
+        ts = ((epoch << LOG2_TE)
+              + np.sort(r.integers(0, 1 << LOG2_TE, n_pkts)).astype(
+                  np.int64))
+        out[sw] = SwitchStream(keys, np.ones(n_pkts, np.int64), ts)
+    return out
+
+
+def build(backend="fleet", kind="cms", rho=5.0, **fleet_kwargs):
+    fk = {"interpret": True, **fleet_kwargs} if backend == "fleet" else None
+    return DiSketchSystem(MEMS, kind, rho_target=rho, log2_te=LOG2_TE,
+                          backend=backend, fleet_kwargs=fk)
+
+
+def run_epochs(system, n_epochs, events_at=None, seed0=100):
+    events_at = events_at or {}
+    for e in range(n_epochs):
+        system.run_epoch(e, streams_for(e, seed0 + e),
+                         events=events_at.get(e))
+
+
+KEYS = np.arange(50).astype(np.uint32)
+EPOCHS = [0, 1, 2, 3]
+
+
+# -- FailureSchedule / HeartbeatMonitor detection ---------------------------
+
+def test_schedule_detects_death_and_recovery():
+    sched = FailureSchedule(SW, downs={2: (3, 6)})
+    evs = {e: sched.advance(e) for e in range(8)}
+    assert evs[3] == [FailureEvent(3, 2, "fail")]
+    assert evs[6] == [FailureEvent(6, 2, "recover")]
+    for e in (0, 1, 2, 4, 5, 7):
+        assert evs[e] == []
+    assert not sched.is_up(2, 4) and sched.is_up(2, 6)
+
+
+def test_schedule_detection_lag_with_slow_timeout():
+    # timeout > one epoch of silence: the monitor only notices after the
+    # SECOND missed beat, so masking starts one epoch late — exactly the
+    # mis-trust window a lazy detector pays in a real deployment
+    sched = FailureSchedule(SW, downs={4: (2, None)}, timeout_s=1.5)
+    fails = {e: [ev for ev in sched.advance(e) if ev.kind == "fail"]
+             for e in range(5)}
+    assert fails[2] == []
+    assert fails[3] == [FailureEvent(3, 4, "fail")]
+
+
+def test_schedule_emits_scripted_shrinks():
+    sched = FailureSchedule(SW, shrinks=[(2, 1, 0.5)])
+    assert sched.advance(1) == []
+    assert sched.advance(2) == [FailureEvent(2, 1, "shrink", 0.5)]
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="out of range"):
+        FailureSchedule(SW, downs={SW: (1, None)})
+    with pytest.raises(ValueError, match="must follow"):
+        FailureSchedule(SW, downs={0: (3, 2)})
+    with pytest.raises(ValueError, match="factor"):
+        FailureSchedule(SW, shrinks=[(1, 0, 1.5)])
+
+
+def test_parity_groups_chunked_validation():
+    assert parity_groups_chunked((0, 1, 2, 3, 4), 2) == [[0, 1], [2, 3],
+                                                         [4]]
+    with pytest.raises(ValueError):
+        parity_groups_chunked((0, 1), 0)
+
+
+# -- fleet-vs-loop parity and masked-query exactness ------------------------
+
+def test_fleet_vs_loop_parity_under_churn():
+    sched = FailureSchedule(SW, downs={3: (1, 3), 0: (2, None)})
+    events_at = {e: sched.advance(e) for e in range(4)}
+    loop, fleet = build("loop"), build("fleet")
+    for s in (loop, fleet):
+        run_epochs(s, 4, events_at)
+    assert loop._dead_at == fleet._dead_at
+    assert loop.ns == fleet.ns
+    for path in [(2, 3), (0, 1), (3,)]:
+        a = loop.query_flows(KEYS, [path] * len(KEYS), EPOCHS,
+                             failures="mask")
+        b = fleet.query_flows(KEYS, [path] * len(KEYS), EPOCHS,
+                              failures="mask")
+        np.testing.assert_allclose(a, b, rtol=1e-9)
+
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_masked_query_matches_survivors_only_oracle(backend):
+    s = build(backend)
+    run_epochs(s, 4, {2: [FailureEvent(2, 3, "fail")]})
+    path = (2, 3)
+    got = s.query_flows(KEYS, [path] * len(KEYS), EPOCHS, failures="mask")
+    recs = [[s.records[e][sw] for sw in path
+             if not (sw == 3 and e >= 2)] for e in EPOCHS]
+    oracle = query.query_window(recs, KEYS, "cms",
+                                single_hop=np.zeros(len(KEYS), bool))
+    np.testing.assert_array_equal(got, oracle)
+
+
+def test_off_path_death_is_bit_identical():
+    # a dead fragment OFF the queried path must not perturb the
+    # estimate in any bit: survivors' counters and control trajectory
+    # are independent of the fleet's losses
+    churned, clean = build("loop"), build("loop")
+    run_epochs(churned, 4, {2: [FailureEvent(2, 3, "fail")]})
+    run_epochs(clean, 4)
+    path = [(0, 1)] * len(KEYS)
+    a = churned.query_flows(KEYS, path, EPOCHS, failures="mask")
+    b = clean.query_flows(KEYS, path, EPOCHS)
+    np.testing.assert_array_equal(a, b)
+    assert churned.ns == clean.ns
+
+
+def test_window_masked_device_matches_host_oracle():
+    ebe = [[], [], [FailureEvent(2, 3, "fail")], []]
+    s = build("fleet")
+    s.run_window(0, [streams_for(e, 100 + e) for e in range(4)],
+                 events_by_epoch=ebe)
+    got = s.query_flows(KEYS, [(2, 3)] * len(KEYS), EPOCHS,
+                        merge="fragment", failures="mask")
+    # the victim's whole window is out (epochs >= 2 dead, epochs < 2
+    # lost with the reclaimed memory): survivors-only == switch 2 alone
+    recs = [[s.records[e][2]] for e in EPOCHS]
+    oracle = query.query_window(recs, KEYS, "cms",
+                                single_hop=np.zeros(len(KEYS), bool),
+                                merge="fragment")
+    np.testing.assert_array_equal(got, oracle)
+
+
+def test_unobservable_window_raises():
+    s = build("fleet")
+    run_epochs(s, 4, {0: [FailureEvent(0, 3, "fail")]})
+    with pytest.raises(ValueError, match="unobservable"):
+        s.query_flows(KEYS, [(3,)] * len(KEYS), EPOCHS, failures="mask")
+
+
+def test_blind_epoch_extrapolation():
+    # single-hop path dead for the back half of the window (front half
+    # parity-recovered): the estimate is the observed half scaled by
+    # E / E_observable (§4.3 blind-spot fill lifted to whole epochs),
+    # on both planes
+    ebe = [[], [], [FailureEvent(2, 3, "fail")], []]
+    sls = [streams_for(e, 100 + e) for e in range(4)]
+    s = build("fleet", parity_groups=[list(range(SW))])
+    s.run_window(0, sls, events_by_epoch=ebe)
+    clean = build("fleet")
+    clean.run_window(0, sls)
+    dev = s.query_flows(KEYS, [(3,)] * len(KEYS), EPOCHS,
+                        merge="fragment", failures="recover")
+    # the recover above patched the stacks; the host mask now sees the
+    # reconstructed epochs 0, 1 and the dead epochs 2, 3 as blind
+    host = s.query_flows(KEYS, [(3,)] * len(KEYS), EPOCHS,
+                         failures="mask")
+    for got, mrg in ((dev, "fragment"), (host, "subepoch")):
+        recs = [[clean.records[e][3]] for e in (0, 1)]
+        half = query.query_window(recs, KEYS, "cms",
+                                  single_hop=np.ones(len(KEYS), bool),
+                                  merge=mrg)
+        np.testing.assert_allclose(got, 2.0 * half, rtol=1e-9)
+
+
+def test_oblivious_zeroed_rows_poison_min_merge():
+    ebe = [[], [], [FailureEvent(2, 3, "fail")], []]
+    s = build("fleet")
+    s.run_window(0, [streams_for(e, 100 + e) for e in range(4)],
+                 events_by_epoch=ebe)
+    path = [(2, 3)] * len(KEYS)
+    obl = s.query_flows(KEYS, path, EPOCHS, merge="fragment",
+                        failures="oblivious")
+    msk = s.query_flows(KEYS, path, EPOCHS, merge="fragment",
+                        failures="mask")
+    # the victim's zeroed rows drive the cms min to 0 for every epoch
+    # it is out; the oblivious estimate collapses below the masked one
+    assert obl.sum() < msk.sum()
+
+
+# -- XOR-parity recovery ----------------------------------------------------
+
+def test_parity_recovery_roundtrip_exact():
+    ebe = [[], [], [FailureEvent(2, 3, "fail")], []]
+    sls = [streams_for(e, 100 + e) for e in range(4)]
+    s = build("fleet", parity_groups=[list(range(SW))])
+    s.run_window(0, sls, events_by_epoch=ebe)
+    # epochs 0, 1 of the victim were un-exported at death: lost, but
+    # single-loss-per-group => recoverable
+    assert s.fleet.recoverable() == {0: [3], 1: [3]}
+    got = s.query_flows(KEYS, [(2, 3)] * len(KEYS), EPOCHS,
+                        merge="fragment", failures="recover")
+    # oracle: a never-failed run, masked only at the dead epochs >= 2
+    clean = build("fleet")
+    clean.run_window(0, sls)
+    recs = [[clean.records[e][sw] for sw in (2, 3)
+             if not (sw == 3 and e >= 2)] for e in EPOCHS]
+    oracle = query.query_window(recs, KEYS, "cms",
+                                single_hop=np.zeros(len(KEYS), bool),
+                                merge="fragment")
+    np.testing.assert_array_equal(got, oracle)
+    # recovered cells' counters are bit-identical to the clean run's
+    rec = s.records[0][3].counters
+    np.testing.assert_array_equal(rec, clean.records[0][3].counters)
+
+
+def test_double_loss_in_group_is_unrecoverable():
+    ebe = [[], [FailureEvent(1, 2, "fail"), FailureEvent(1, 3, "fail")],
+           [], []]
+    sls = [streams_for(e, 100 + e) for e in range(4)]
+    both = build("fleet", parity_groups=[list(range(SW))])
+    both.run_window(0, sls, events_by_epoch=ebe)
+    assert both.fleet.recoverable() == {}
+    # same double loss across DIFFERENT groups: both reconstructible
+    split = build("fleet", parity_groups=[[0, 1, 2], [3, 4, 5]])
+    split.run_window(0, sls, events_by_epoch=ebe)
+    assert split.fleet.recoverable() == {0: [2, 3]}
+    assert split.fleet.recover() == {0: [2, 3]}
+    clean = build("fleet")
+    clean.run_window(0, sls)
+    for sw in (2, 3):
+        np.testing.assert_array_equal(split.records[0][sw].counters,
+                                      clean.records[0][sw].counters)
+
+
+def test_parity_groups_validation():
+    with pytest.raises(ValueError, match="not in the fleet"):
+        build("fleet", parity_groups=[[0, 99]])
+    with pytest.raises(ValueError, match="more than one parity group"):
+        build("fleet", parity_groups=[[0, 1], [1, 2]])
+
+
+# -- §6 re-equalization and shrink events -----------------------------------
+
+def test_converge_n_reaches_band_in_one_call():
+    rho = 4.0
+    for n0, peb in [(1, 100.0), (64, 0.5), (8, 4.0), (1, 1e6)]:
+        n = equalize.converge_n(n0, peb, rho)
+        predicted = peb * n0 / n
+        assert (rho / 2.0 <= predicted <= 2.0 * rho
+                or n in (1, equalize.N_MAX))
+        # idempotent: re-running from the converged point is a no-op
+        assert equalize.converge_n(n, predicted, rho) == n
+
+
+def test_reequalize_touches_only_observed_out_of_band():
+    ns = {0: 4, 1: 4, 2: 4}
+    pebs = {0: 100.0, 1: 5.0}            # 2 has no observation
+    out = equalize.reequalize(ns, pebs, rho_target=4.0)
+    assert out[0] > 4                    # far out of band: jumped
+    assert out[1] == 4                   # in band: untouched
+    assert out[2] == 4                   # unobserved: untouched
+
+
+def test_failure_triggers_survivor_reequalization():
+    s = build("loop", rho=0.5)           # tight target: n ramps up
+    run_epochs(s, 2)
+    before = dict(s.ns)
+    s.run_epoch(2, streams_for(2, 102), events=[FailureEvent(2, 0, "fail")])
+    # the event jumps out-of-band survivors straight to their converged
+    # setting (factor-2-per-epoch would take log2 steps)
+    last = {sw: p for log in s.peb_log[:2] for sw, p in log.items()}
+    for sw in range(1, SW):
+        expect = equalize.converge_n(before[sw], last[sw], 0.5)
+        assert s.ns[sw] == equalize.next_n(expect, s.peb_log[-1][sw], 0.5)
+    assert 0 not in s.peb_log[-1]
+
+
+def test_recovered_fragment_restarts_at_n0():
+    s = build("loop", rho=0.5)
+    run_epochs(s, 3, {1: [FailureEvent(1, 2, "fail")]})
+    s.run_epoch(3, streams_for(3, 103),
+                events=[FailureEvent(3, 2, "recover")])
+    assert s.n_log[-1][2] >= 1 and 2 in s.peb_log[-1]
+    assert s._valid(2, 3) and not s._valid(2, 2)
+
+
+def test_mid_window_shrink_defers_to_next_dispatch():
+    sls = [streams_for(e, 100 + e) for e in range(4)]
+    s = build("fleet")
+    w0 = s.fragments[1].width
+    s.run_window(0, sls, events_by_epoch=[
+        [], [FailureEvent(1, 1, "shrink", 0.25)], [], []])
+    assert s.fragments[1].width == w0    # frozen within the window
+    s.run_epoch(4, streams_for(4, 104))  # boundary: shrink lands
+    assert s.fragments[1].width < w0
+    assert int(s.fleet.widths[s.fleet._frag_pos[1]]) == \
+        s.fragments[1].width
+    # past windows still query correctly with their per-epoch widths
+    est = s.query_flows(KEYS, [(1,)] * len(KEYS), EPOCHS)
+    assert np.isfinite(est).all()
+
+
+def test_epoch_mode_shrink_applies_immediately():
+    s = build("loop")
+    w0 = s.fragments[1].width
+    s.run_epoch(0, streams_for(0, 100),
+                events=[FailureEvent(0, 1, "shrink", 0.25)])
+    assert s.fragments[1].width < w0
+
+
+def test_aggregated_system_rejects_events():
+    agg = AggregatedSystem({16: 4096}, "cms")
+    with pytest.raises(ValueError, match="no churn"):
+        agg.run_epoch(0, {}, events=[FailureEvent(0, 16, "fail")])
+    agg.run_epoch(0, {}, events=[])      # empty is fine
+
+
+# -- end-to-end churn sweep (replayer + schedule), slow ----------------------
+
+@pytest.mark.slow
+def test_replayer_churn_sweep_fleet_vs_loop():
+    from repro.net.simulator import Replayer, rmse
+    from repro.net.topology import FatTree
+    from repro.net.traffic import gen_workload
+
+    topo = FatTree(4)
+    wl = gen_workload(topo, n_flows=2_000, total_packets=20_000,
+                      n_epochs=8, burstiness=0.2, seed=5)
+    rep = Replayer(wl, topo.n_switches)
+    sel = wl.path_len == 5
+    keys, truth = wl.keys[sel], wl.sizes[sel]
+    paths = [p for p, s in zip(wl.paths, sel) if s]
+    epochs = list(range(wl.n_epochs))
+    mems = {sw: 2048 for sw in range(topo.n_switches)}
+
+    def sched():
+        return FailureSchedule.random(topo.n_switches, 0.25,
+                                      down_epoch=5, seed=9)
+
+    groups = parity_groups_chunked(tuple(range(topo.n_switches)), 5)
+    loop = DiSketchSystem(mems, "cms", rho_target=5.0, log2_te=wl.log2_te)
+    fleet = DiSketchSystem(mems, "cms", rho_target=5.0, log2_te=wl.log2_te,
+                           backend="fleet",
+                           fleet_kwargs={"interpret": True,
+                                         "parity_groups": groups})
+    rep.run(loop, failures=sched())
+    rep.run(fleet, window=4, failures=sched())
+    # per-epoch loop loses nothing (every epoch exports at its own
+    # boundary); recovery makes the windowed fleet match it
+    a = loop.query_flows(keys, paths, epochs, failures="mask")
+    b = fleet.query_flows(keys, paths, epochs, merge="fragment",
+                          failures="recover")
+    assert rmse(b, truth) <= rmse(a, truth) * 1.5
+    obl = fleet.query_flows(keys, paths, epochs, merge="fragment",
+                            failures="oblivious")
+    assert rmse(b, truth) < rmse(obl, truth)
