@@ -34,7 +34,7 @@ from .common import emit
 
 _MATCH_COLS = ("pallas_matches_ref", "fleet_matches_loop",
                "ragged_matches_dense", "query_matches_oracle",
-               "resilience_ok")
+               "resilience_ok", "durability_ok")
 SCHEMA = 2
 #: headline metrics gated against the committed baseline (>20% drop fails)
 _GATED = ("ragged_pkts_per_s", "uniform_fleet_speedup_x")
@@ -103,6 +103,18 @@ def headline_from_rows(rows, quick: bool = True) -> dict:
             h["resilience_masked_improvement_x"] = max(
                 h.get("resilience_masked_improvement_x", 0),
                 r["masked_improvement_x"])
+        elif r.get("bench") == "durability":
+            # export plane (correctness-gated via durability_ok, not
+            # perf-gated): masked durable error vs the retry-disabled
+            # oblivious baseline, and worst-case crash-recovery cost
+            if r.get("scenario") == "drop":
+                h["durability_masked_improvement_x"] = max(
+                    h.get("durability_masked_improvement_x", 0),
+                    r["masked_improvement_x"])
+            elif r.get("scenario") == "crash":
+                h["durability_recovery_rounds"] = max(
+                    h.get("durability_recovery_rounds", 0),
+                    r["recovery_rounds"])
     return h
 
 
@@ -268,12 +280,14 @@ def run(quick: bool = True):
             "ref_pkts_per_s": round(p / t_ref),
         })
     emit("kernel_bench", [r for r in rows if r["bench"] == "single_kernel"])
+    from .durability import run as run_durability
     from .resilience import run as run_resilience
 
     rows = (rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
             + run_query_plane(quick=quick)
             + run_univmon_fleet(quick=quick)
-            + run_resilience(quick=quick))
+            + run_resilience(quick=quick)
+            + run_durability(quick=quick))
     headline = headline_from_rows(rows, quick=quick)
     path = write_bench_json(rows, headline)
     print(f"headline: {json.dumps(headline)}")

@@ -18,4 +18,12 @@ echo "== docs check (dead links + api.md quickstart) =="
 python scripts/check_docs.py
 
 echo "== tier-1 tests =="
-python -m pytest -x -q
+# Per-test timeout when the pytest-timeout plugin is installed (CI
+# installs requirements-dev.txt): a hung retry/backoff loop fails fast
+# instead of stalling the job.  Local runs without the plugin are
+# unaffected.
+TIMEOUT_ARGS=()
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+    TIMEOUT_ARGS=(--timeout=300 --timeout-method=thread)
+fi
+python -m pytest -x -q "${TIMEOUT_ARGS[@]}"

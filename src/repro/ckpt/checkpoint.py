@@ -34,6 +34,20 @@ def _leaf_paths(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory so the rename-based commit protocol is
+    durable across power loss, not just process crash (a rename is only
+    persistent once the *directory* entry is synced)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return       # platform without O_RDONLY dir opens: best effort
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree, *, keep: int = 3,
                     extra: Optional[dict] = None) -> str:
     """Atomically save a pytree checkpoint.  Returns the final path."""
@@ -58,11 +72,19 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, keep: int = 3,
             "dtype": str(arr.dtype), "crc32": crc})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
         f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_path(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    # the rename itself is only durable once the parent directory's
+    # entry table hits disk
+    _fsync_path(ckpt_dir)
     _prune(ckpt_dir, keep)
     return final
 
@@ -95,11 +117,33 @@ def restore_checkpoint(ckpt_dir: str, like_tree, *,
                        step: Optional[int] = None,
                        verify: bool = True):
     """Restore the newest committed checkpoint into ``like_tree``'s
-    structure.  Returns (tree, step, extra) or (None, None, None)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-    if step is None:
+    structure.  Returns (tree, step, extra) or (None, None, None).
+
+    With ``step=None`` (the restart path), a torn/corrupt trailing step
+    — truncated array file, checksum mismatch, unreadable manifest —
+    is *skipped* and restore falls back to the newest older committed
+    step that loads cleanly: a crash that slipped a bad step past the
+    ``_COMMITTED`` marker (e.g. lost sectors under power failure) must
+    degrade to the previous good state, not take the restart down.  If
+    every committed step is corrupt the last error propagates.  An
+    explicitly requested ``step`` still raises on any corruption.
+    """
+    if step is not None:
+        return _restore_step(ckpt_dir, like_tree, step, verify)
+    steps = sorted(_committed_steps(ckpt_dir), reverse=True)
+    if not steps:
         return None, None, None
+    err: Optional[Exception] = None
+    for s in steps:
+        try:
+            return _restore_step(ckpt_dir, like_tree, s, verify)
+        except (OSError, ValueError, KeyError,
+                json.JSONDecodeError) as e:
+            err = err if err is not None else e
+    raise err
+
+
+def _restore_step(ckpt_dir: str, like_tree, step: int, verify: bool):
     path = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

@@ -93,6 +93,9 @@ class DiSketchSystem:
         # Resource-reclaim shrinks arriving mid-window are deferred to
         # the next dispatch boundary (widths are frozen per window).
         self._pending_shrink: Dict[int, float] = {}
+        # Observability accounting of the last query window (stamped by
+        # query_flows / query_entropy; see ``observability``).
+        self.last_observability: Optional[Dict] = None
         if backend not in ("loop", "fleet"):
             raise ValueError(f"unknown backend {backend!r}")
         self.backend = backend
@@ -312,6 +315,34 @@ class DiSketchSystem:
 
     # -- query plane --------------------------------------------------------
 
+    def observability(self, epochs: Sequence[int]) -> Dict:
+        """Staleness/observability accounting for a query window: per
+        epoch, how many fragment cells are genuine observations *right
+        now* (not dead, not lost, not held back by a pending export),
+        plus the whole-window blind-epoch extrapolation scale
+        (E / E_observable) masked queries apply.  Stamped on
+        ``last_observability`` by every query entry point."""
+        epochs = list(epochs)
+        n_frags = len(self.fragments)
+        per_epoch: Dict[int, int] = {}
+        for e in epochs:
+            if self.fleet is not None and (
+                    e in self.fleet._window_bufs or e in self.fleet.stacked):
+                live = self.fleet.frag_live(e)
+                per_epoch[e] = (n_frags if live is None
+                                else int(live.sum()))
+            else:
+                recs = self.records.get(e, {})
+                per_epoch[e] = sum(1 for sw in recs
+                                   if self._valid(sw, e))
+        obs, scale = query.window_observability(
+            [[None] * per_epoch[e] for e in epochs])
+        return {"epochs": len(epochs), "observable_epochs": obs,
+                "scale": scale,
+                "observable_cells": sum(per_epoch.values()),
+                "total_cells": n_frags * len(epochs),
+                "per_epoch": per_epoch}
+
     def _valid(self, sw: int, epoch: int) -> bool:
         """Is (switch, epoch) a genuine observation?  Dead and lost
         cells are not; parity-recovered cells are again."""
@@ -372,6 +403,7 @@ class DiSketchSystem:
         """
         if failures not in ("oblivious", "mask", "recover"):
             raise ValueError(f"unknown failure policy {failures!r}")
+        self.last_observability = self.observability(epochs)
         keys = np.asarray(keys, dtype=np.uint32)
         out = np.zeros(len(keys))
         by_path: Dict[Tuple[int, ...], List[int]] = {}
@@ -397,15 +429,14 @@ class DiSketchSystem:
             recs = self._records_for(path, epochs, failures=failures)
             scale = 1.0
             if failures != "oblivious":
-                obs = [r for r in recs if r]
-                if not obs:
-                    raise ValueError(
-                        f"no epoch in {list(epochs)} has a live fragment on "
-                        f"path {path}; the window is unobservable")
                 # query_window skips empty (blind) epochs; extrapolate
                 # O_Q from the observed ones (§4.3 blind-spot fill,
                 # lifted from subepoch slots to whole epochs).
-                scale = len(recs) / len(obs)
+                n_obs, scale = query.window_observability(recs)
+                if not n_obs:
+                    raise ValueError(
+                        f"no epoch in {list(epochs)} has a live fragment on "
+                        f"path {path}; the window is unobservable")
             sh = np.full(len(idxs), len(path) == 1)
             out[idxs] = query.query_window(
                 recs, keys[idxs], self.kind,
@@ -439,6 +470,7 @@ class DiSketchSystem:
         assert self.kind == "um"
         if failures not in ("oblivious", "mask", "recover"):
             raise ValueError(f"unknown failure policy {failures!r}")
+        self.last_observability = self.observability(epochs)
         by_path: Dict[Tuple[int, ...], List[int]] = {}
         for i, p in enumerate(paths):
             by_path.setdefault(tuple(p), []).append(i)

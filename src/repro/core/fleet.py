@@ -641,6 +641,12 @@ class FleetEpochRunner:
         # (reclaimed before the window export) — maskable, and
         # recoverable from parity while a single loss per group.
         self._lost: Dict[int, set] = {}
+        # epoch -> set of frag_order positions staged by the export
+        # plane but not yet delivered (runtime/export.py): their rows
+        # are zeroed + masked like dead cells, but tracked in their own
+        # domain — they are *in flight*, not dead, and flip back live
+        # when the cell's export message arrives (``deliver_cell``).
+        self._unexported: Dict[int, set] = {}
         # epoch -> per-group (n_levels, n_sub_max, width_max) int32 XOR
         # parity over the group members' rows (computed from the same
         # window dispatch, before lost cells are zeroed).
@@ -664,6 +670,11 @@ class FleetEpochRunner:
                     self._group_of[i] = gi
                     idx.append(i)
                 self.parity_groups.append(np.asarray(idx, np.int64))
+        # Observability accounting of the last window query (stamped by
+        # ``_liveness_sels`` on every query entry point): how many of
+        # the queried epochs had a live on-path fragment, and the
+        # blind-epoch extrapolation scale that was applied.
+        self.last_observability: Optional[Dict] = None
 
     # Exactness bound.  Counters are f32 accumulations: exact while
     # every intermediate magnitude stays below 2^24.  For unsigned (cms)
@@ -795,6 +806,7 @@ class FleetEpochRunner:
         self._window_bufs.pop(epoch, None)
         self._lost.pop(epoch, None)
         self._parity.pop(epoch, None)
+        self._unexported.pop(epoch, None)
         if dead_pos:
             live = np.ones(len(self.frag_order) * L, bool)
             for i in dead_pos:
@@ -922,6 +934,7 @@ class FleetEpochRunner:
             self.stacked.pop(ep, None)
             self._lost.pop(ep, None)
             self._parity.pop(ep, None)
+            self._unexported.pop(ep, None)
             if parity_by_epoch is not None:
                 self._parity[ep] = parity_by_epoch[e]
             invalid = dead_sets[e] | lost_sets[e]
@@ -1005,6 +1018,72 @@ class FleetEpochRunner:
         None when no failure touched it (every fragment live)."""
         live = self._row_live.get(epoch)
         return None if live is None else live[::self.n_levels]
+
+    # -- export-plane cell hooks (runtime/export.py) ---------------------
+    # The durable export plane models collection as per-(epoch, switch)
+    # *cells* of the retained window stack: ``cell_counters`` reads a
+    # cell's exact payload, ``mark_unexported`` holds cells back (zero +
+    # mask, own liveness domain) until their export message arrives, and
+    # ``deliver_cell`` patches a delivered payload back in place and
+    # flips the rows live — so late arrivals sharpen every subsequent
+    # query through the ordinary ``failures="mask"`` machinery.
+
+    def cell_counters(self, epoch: int, sw: int) -> np.ndarray:
+        """One (epoch, fragment) cell of the retained window stack as an
+        exact int32 copy — the export payload (lossless: counters are
+        exact integers below 2^24)."""
+        if epoch not in self._window_bufs:
+            raise KeyError(f"epoch {epoch} has no retained window stack")
+        buf, e_idx = self._window_bufs[epoch]
+        i = self._frag_pos[sw]
+        L = self.n_levels
+        return (np.asarray(buf.epoch_view(e_idx)[i * L:(i + 1) * L])
+                .astype(np.int32))
+
+    def mark_unexported(self, epoch: int, sws: Sequence[int]) -> None:
+        """Hold (epoch, switch) cells back from the query plane: zero
+        their window-stack rows and mask them via the liveness registry.
+        Deliberately NOT the ``_lost`` domain — that is parity's (a
+        pending cell is in flight, not reclaimed)."""
+        if epoch not in self._window_bufs:
+            raise KeyError(f"epoch {epoch} has no retained window stack")
+        buf, e_idx = self._window_bufs[epoch]
+        L = self.n_levels
+        live = self._row_live.get(epoch)
+        if live is None:
+            live = np.ones(len(self.frag_order) * L, bool)
+            self._row_live[epoch] = live
+        pend = self._unexported.setdefault(epoch, set())
+        _, _, n_sub_max, width_max = buf._shape
+        zeros = np.zeros((L, n_sub_max, width_max), np.int64)
+        for sw in sws:
+            i = self._frag_pos[sw]
+            buf.patch(e_idx, i * L, (i + 1) * L, zeros)
+            live[i * L:(i + 1) * L] = False
+            pend.add(i)
+
+    def deliver_cell(self, epoch: int, sw: int,
+                     counters: np.ndarray) -> None:
+        """Patch one delivered cell's exact integer counters back into
+        the window stack and flip its rows live — the inverse of
+        ``mark_unexported``.  Once every row of the epoch is live again
+        the liveness entry is dropped entirely, restoring the
+        no-failure fast path bit-identically."""
+        buf, e_idx = self._window_bufs[epoch]
+        i = self._frag_pos[sw]
+        L = self.n_levels
+        buf.patch(e_idx, i * L, (i + 1) * L,
+                  np.asarray(counters).astype(np.int64))
+        pend = self._unexported.get(epoch)
+        if pend is not None:
+            pend.discard(i)
+            if not pend:
+                del self._unexported[epoch]
+        live = self._row_live.get(epoch)
+        if live is not None:
+            live[i * L:(i + 1) * L] = True
+            if live.all():
+                del self._row_live[epoch]
 
     def recoverable(self, epochs: Optional[Sequence[int]] = None,
                     ) -> Dict[int, List[int]]:
@@ -1144,6 +1223,9 @@ class FleetEpochRunner:
             failures = "mask"
         if failures != "mask" or not any(e in self._row_live
                                          for e in epochs):
+            self.last_observability = {
+                "epochs": len(list(epochs)),
+                "observable_epochs": len(list(epochs)), "scale": 1.0}
             return list(epochs), None, 1.0
         n_rows = len(self.frag_order) * self.n_levels
         base_arr = np.ones(n_rows, bool) if base is None else base
@@ -1157,6 +1239,9 @@ class FleetEpochRunner:
                 "window query: no epoch in the window has a live "
                 "on-path fragment — the flow is unobservable under the "
                 "failure schedule")
+        self.last_observability = {
+            "epochs": len(list(epochs)), "observable_epochs": len(obs),
+            "scale": len(epochs) / len(obs)}
         return obs, sel_by_e, len(epochs) / len(obs)
 
     def window_query(self, epochs: Sequence[int], keys: np.ndarray,

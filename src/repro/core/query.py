@@ -16,7 +16,7 @@ controller-side analysis plane, not the data plane).
 from __future__ import annotations
 
 import warnings
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -289,6 +289,20 @@ def um_fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
 
     return um_window_query_device(stack, params_by_epoch, keys, n_levels,
                                   frag_sel=frag_sel)
+
+
+def window_observability(records_by_epoch: Sequence[Sequence],
+                         ) -> Tuple[int, float]:
+    """(observable_epochs, scale) of a record-plane query window: how
+    many epochs contribute at least one live record, and the §4.3
+    blind-epoch extrapolation factor E / E_observable masked window
+    estimates are scaled by (``inf`` when every epoch is blind — the
+    caller's unobservable-flow error case).  The single source of the
+    staleness accounting surfaced by ``DiSketchSystem.observability``
+    and applied by ``query_flows``."""
+    n = len(records_by_epoch)
+    obs = sum(1 for records in records_by_epoch if records)
+    return obs, (n / obs if obs else float("inf"))
 
 
 def query_window(records_by_epoch: Sequence[Sequence[EpochRecords]],

@@ -188,6 +188,12 @@ class Replayer:
                 if failures is not None:
                     kw["events_by_epoch"] = [failures.advance(e)
                                              for e in eps]
+                    if any(kw["events_by_epoch"]):
+                        # a failure/recovery cycle reprocesses the whole
+                        # window: stale LRU entries from a previous run
+                        # of these epochs must not pair old packing with
+                        # the new churn state
+                        self.invalidate_packets(eps)
                 system.run_window(
                     e0, [self._streams[e] for e in eps],
                     packets=[self.epoch_packet(e, fleet.frag_order)
@@ -197,6 +203,8 @@ class Replayer:
             kw = {}
             if failures is not None:
                 kw["events"] = failures.advance(ep)
+                if kw["events"]:
+                    self.invalidate_packets([ep])
             if fleet is not None:
                 system.run_epoch(ep, self._streams[ep],
                                  packet=self.epoch_packet(
@@ -206,6 +214,20 @@ class Replayer:
 
     def epoch_stream(self, epoch: int) -> Dict[int, SwitchStream]:
         return self._streams[epoch]
+
+    def invalidate_packets(self, epochs) -> int:
+        """Evict the packed-epoch LRU entries for ``epochs`` (every
+        frag_order variant).  Called by ``run`` whenever a
+        failure/recovery cycle reprocesses those epochs: the packed
+        tensors are shared across systems and replays, so an entry a
+        caller mutated (or that pairs with superseded churn state) must
+        be rebuilt from the pristine per-switch streams rather than
+        silently reused.  Returns the number of entries evicted."""
+        eset = set(int(e) for e in epochs)
+        victims = [k for k in self._packets if k[0] in eset]
+        for k in victims:
+            del self._packets[k]
+        return len(victims)
 
     def epoch_packet(self, epoch: int, frag_order=None):
         """Packed fragment-major packet tensor for the fleet engine.

@@ -1,5 +1,8 @@
 from .fault_tolerance import (HeartbeatMonitor, ElasticMesh,
                               StragglerPolicy, TrainingSupervisor)
+from .export import (AckMsg, Collector, DurableExportPlane, ExportMsg,
+                     SwitchExporter)
 
 __all__ = ["HeartbeatMonitor", "ElasticMesh", "StragglerPolicy",
-           "TrainingSupervisor"]
+           "TrainingSupervisor", "AckMsg", "Collector",
+           "DurableExportPlane", "ExportMsg", "SwitchExporter"]

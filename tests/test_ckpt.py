@@ -77,3 +77,33 @@ def test_prune_keeps_newest(tmp_path):
 def test_restore_empty_dir(tmp_path):
     out, step, extra = restore_checkpoint(str(tmp_path / "none"), _tree())
     assert out is None and step is None
+
+
+def test_torn_trailing_step_falls_back(tmp_path):
+    # A crash that slipped a bad step past _COMMITTED (lost sectors under
+    # power failure) must degrade the restart to the previous good step,
+    # not take it down.
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    save_checkpoint(d, 1, tree)
+    path2 = save_checkpoint(d, 2, tree)
+    with open(os.path.join(path2, "arr_00000.npy"), "r+b") as f:
+        f.truncate(8)                        # torn array file
+    out, step, _ = restore_checkpoint(d, tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+    # an explicitly requested corrupt step still raises
+    with pytest.raises(IOError, match="checksum"):
+        restore_checkpoint(d, tree, step=2)
+
+
+def test_corrupt_manifest_falls_back(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    save_checkpoint(d, 1, tree)
+    path2 = save_checkpoint(d, 2, tree)
+    with open(os.path.join(path2, "manifest.json"), "w") as f:
+        f.write("{ not json")
+    out, step, _ = restore_checkpoint(d, tree)
+    assert step == 1 and out is not None

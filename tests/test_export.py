@@ -1,0 +1,519 @@
+"""Durable export plane suite: lossy-channel determinism, retry/backoff,
+exactly-once apply, drained bit-identity, loss accounting, collector
+crash recovery, and composition with Replayer/FailureSchedule.
+
+Bit-identity is the load-bearing claim: counters are exact integers
+(|c| < 2^24), payloads are exact int32, so a drained (or crashed and
+recovered) collector must equal a crash-free lossless oracle *exactly*
+— not approximately.
+"""
+import numpy as np
+import pytest
+
+from repro.core.disketch import DiSketchSystem, SwitchStream
+from repro.net.channel import LossyChannel
+from repro.net.simulator import FailureSchedule, Replayer
+from repro.runtime.export import (AckMsg, DurableExportPlane, ExportMsg,
+                                  SwitchExporter)
+
+SW = 4
+LOG2_TE = 10
+MEMS = {sw: 256 for sw in range(SW)}
+KEYS = np.arange(40).astype(np.uint32)
+EPOCHS = [0, 1, 2, 3]
+PATHS = [tuple(range(SW))] * len(KEYS)
+
+
+def streams_for(epoch, seed, n_pkts=200, n_keys=40):
+    r = np.random.default_rng(seed)
+    out = {}
+    for sw in range(SW):
+        keys = r.integers(0, n_keys, n_pkts).astype(np.uint32)
+        ts = ((epoch << LOG2_TE)
+              + np.sort(r.integers(0, 1 << LOG2_TE, n_pkts)).astype(
+                  np.int64))
+        out[sw] = SwitchStream(keys, np.ones(n_pkts, np.int64), ts)
+    return out
+
+
+STREAMS = [streams_for(e, 100 + e) for e in range(4)]
+
+
+def build(backend="fleet"):
+    fk = {"interpret": True} if backend == "fleet" else None
+    return DiSketchSystem(MEMS, "cms", rho_target=5.0, log2_te=LOG2_TE,
+                          backend=backend, fleet_kwargs=fk)
+
+
+def run_all(plane_or_sys, backend):
+    if backend == "fleet":
+        plane_or_sys.run_window(0, STREAMS)
+    else:
+        for e in range(4):
+            plane_or_sys.run_epoch(e, STREAMS[e])
+
+
+def oracle_cells(backend):
+    """{(sw, e): exact int32 counters} of a lossless, plane-free run."""
+    sys_ = build(backend)
+    run_all(sys_, backend)
+    if backend == "fleet":
+        return sys_, {(sw, e): sys_.fleet.cell_counters(e, sw)
+                      for e in EPOCHS for sw in sys_.fleet.frag_order}
+    return sys_, {(sw, e): np.asarray(
+        sys_.records[e][sw].counters).astype(np.int32)
+        for e in EPOCHS for sw in range(SW)}
+
+
+def plane_cells(plane, backend):
+    if backend == "fleet":
+        fl = plane.system.fleet
+        return {(sw, e): fl.cell_counters(e, sw)
+                for e in EPOCHS for sw in fl.frag_order}
+    return {(sw, e): np.asarray(rec.counters).astype(np.int32)
+            for e in EPOCHS
+            for sw, rec in plane.system.records[e].items()}
+
+
+def lossy(seed=9, p_drop=0.3):
+    return (LossyChannel(p_drop=p_drop, p_dup=0.2, p_reorder=0.3,
+                         delay=(0, 2), seed=seed),
+            LossyChannel(p_drop=0.5 * p_drop, p_dup=0.2, delay=(0, 1),
+                         seed=seed + 1))
+
+
+# -- LossyChannel -----------------------------------------------------------
+
+def _msgs(n, frag=0):
+    return [ExportMsg(frag, e, s, np.zeros(1, np.int32))
+            for e in range(n) for s in range(2)]
+
+
+def _fates(ch, msgs, now=0):
+    for m in msgs:
+        ch.send(m, now)
+    got = {}
+    for t in range(now + 1, now + 40):
+        for m in ch.deliver(t):
+            got.setdefault((m.frag, m.epoch, m.seq), []).append(t)
+    return got
+
+
+def test_channel_fate_is_order_independent():
+    kw = dict(p_drop=0.4, p_dup=0.3, p_reorder=0.3, delay=(0, 3), seed=7)
+    msgs = _msgs(6)
+    a = _fates(LossyChannel(**kw), msgs)
+    b = _fates(LossyChannel(**kw), list(reversed(msgs)))
+    assert a == b
+    # and a different seed draws different fates
+    c = _fates(LossyChannel(**dict(kw, seed=8)), msgs)
+    assert a != c
+
+
+def test_channel_drop_all_and_dup_all():
+    black_hole = LossyChannel(p_drop=1.0, seed=1)
+    assert _fates(black_hole, _msgs(4)) == {}
+    assert black_hole.n_dropped == black_hole.n_sent == 8
+    dup = LossyChannel(p_dup=1.0, seed=1)
+    got = _fates(dup, _msgs(4))
+    assert all(len(ts) == 2 for ts in got.values())
+    assert dup.n_delivered == 2 * dup.n_sent
+
+
+def test_channel_delay_bounds_and_reorder():
+    ch = LossyChannel(delay=(2, 5), seed=3)
+    for (f, e, s), ts in _fates(ch, _msgs(8), now=10).items():
+        assert all(13 <= t <= 16 for t in ts)   # now + 1 + [2, 5]
+    # reordering: some message sent EARLIER is delivered strictly later
+    ch = LossyChannel(p_reorder=0.9, seed=3)
+    order = []
+    for i, m in enumerate(_msgs(10)):
+        ch.send(m, 0)
+        order.append((m.frag, m.epoch, m.seq))
+    arrived = []
+    for t in range(1, 30):
+        arrived.extend((m.frag, m.epoch, m.seq) for m in ch.deliver(t))
+    ranks = [order.index(k) for k in arrived]
+    assert ranks != sorted(ranks)
+
+
+def test_channel_clear_loses_wire():
+    ch = LossyChannel(delay=(3, 3), seed=0)
+    for m in _msgs(3):
+        ch.send(m, 0)
+    assert ch.pending() == 6
+    assert ch.clear() == 6
+    assert ch.pending() == 0 and ch.deliver(100) == []
+
+
+def test_channel_validation():
+    with pytest.raises(ValueError, match="p_drop"):
+        LossyChannel(p_drop=1.5)
+    with pytest.raises(ValueError, match="delay"):
+        LossyChannel(delay=(3, 1))
+
+
+# -- SwitchExporter ---------------------------------------------------------
+
+class _Recorder:
+    """Channel stub that records (round, seq) of every send."""
+
+    def __init__(self):
+        self.sent = []
+
+    def send(self, msg, now):
+        self.sent.append((now, msg.seq))
+
+
+def test_exporter_backoff_schedule_and_budget():
+    exp = SwitchExporter(0, max_retries=3, backoff0=1, backoff_max=4)
+    exp.stage(5, np.ones(2, np.int32), now=0)
+    rec = _Recorder()
+    for t in range(1, 20):
+        exp.tick(t, rec)
+    # waits 1, 2, 4, 4 (capped) rounds between attempts, then gives up
+    assert rec.sent == [(1, 0), (2, 1), (4, 2), (8, 3)]
+    assert exp.exhausted_epochs() == [5]
+    assert exp.unfinished() == []
+    assert exp.n_tx == 4
+
+
+def test_exporter_ack_stops_retransmission_and_release_drops():
+    exp = SwitchExporter(0, max_retries=8)
+    exp.stage(1, np.ones(2, np.int32), now=0)
+    rec = _Recorder()
+    exp.tick(1, rec)
+    exp.on_ack(1)
+    for t in range(2, 10):
+        exp.tick(t, rec)
+    assert rec.sent == [(1, 0)]        # ACK silenced the retry loop
+    assert 1 in exp.entries            # retained until commit
+    exp.release(1)
+    assert exp.entries == {}
+
+
+def test_exporter_resync_keeps_exhausted_dead():
+    exp = SwitchExporter(0, max_retries=0)
+    exp.stage(1, np.ones(2, np.int32), now=0)
+    exp.stage(2, np.ones(2, np.int32), now=0)
+    rec = _Recorder()
+    exp.tick(1, rec)                   # both exhausted (budget 0)
+    assert sorted(exp.exhausted_epochs()) == [1, 2]
+    restaged = exp.resync(applied={(0, 1)}, now=5)
+    # epoch 1 was applied -> re-ACKed; epoch 2 stays exhausted (its loss
+    # was already reported and must not silently un-happen)
+    assert restaged == []
+    assert exp.entries[1].acked and exp.exhausted_epochs() == [2]
+
+
+def test_exporter_validation():
+    with pytest.raises(ValueError):
+        SwitchExporter(0, max_retries=-1)
+    with pytest.raises(ValueError):
+        SwitchExporter(0, backoff0=4, backoff_max=2)
+
+
+# -- plane composition limits ----------------------------------------------
+
+def test_plane_rejects_parity_groups():
+    from repro.core.fleet import parity_groups_chunked
+    sys_ = DiSketchSystem(MEMS, "cms", rho_target=5.0, log2_te=LOG2_TE,
+                          backend="fleet",
+                          fleet_kwargs={"interpret": True,
+                                        "parity_groups":
+                                        parity_groups_chunked(
+                                            tuple(range(SW)), 2)})
+    with pytest.raises(ValueError, match="parity"):
+        DurableExportPlane(sys_)
+
+
+def test_plane_rejects_per_epoch_fleet():
+    plane = DurableExportPlane(build("fleet"))
+    with pytest.raises(ValueError, match="window mode"):
+        plane.run_epoch(0, STREAMS[0])
+
+
+# -- drained bit-identity ---------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_drained_plane_bit_identical_to_oracle(backend):
+    oracle_sys, want = oracle_cells(backend)
+    plane = DurableExportPlane(build(backend), *lossy(), max_retries=12)
+    run_all(plane, backend)
+    # nothing delivered yet: every cell is pending, none lost
+    assert len(plane.pending_cells()) == SW * 4
+    plane.drain()
+    assert plane.lost_cells() == set() and plane.pending_cells() == set()
+    got = plane_cells(plane, backend)
+    assert sorted(got) == sorted(want)
+    for k in want:
+        assert np.array_equal(got[k], want[k]), k
+    est = plane.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    ref = oracle_sys.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    assert np.array_equal(est, ref)
+    s = plane.stats()
+    assert s["n_applied"] == SW * 4
+    assert s["n_tx"] > SW * 4          # drops forced retransmissions
+    if backend == "fleet":
+        fl = plane.system.fleet
+        assert not fl._unexported      # every hold-back was patched back
+
+
+def test_duplicate_deliveries_apply_once():
+    _, want = oracle_cells("loop")
+    plane = DurableExportPlane(
+        build("loop"),
+        LossyChannel(p_dup=1.0, delay=(0, 2), seed=2),
+        LossyChannel(p_dup=1.0, seed=3))
+    run_all(plane, "loop")
+    plane.drain()
+    assert plane.collector.n_dup_rx > 0
+    got = plane_cells(plane, "loop")
+    for k in want:
+        assert np.array_equal(got[k], want[k]), k
+
+
+# -- loss accounting --------------------------------------------------------
+
+class _DropFrag(LossyChannel):
+    """Lossless except for one fragment's messages (all dropped)."""
+
+    def __init__(self, frag, **kw):
+        super().__init__(**kw)
+        self._victim = frag
+
+    def send(self, msg, now):
+        if getattr(msg, "frag", None) == self._victim:
+            self.n_sent += 1
+            self.n_dropped += 1
+            return
+        super().send(msg, now)
+
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_exhausted_budget_reports_exact_losses(backend):
+    plane = DurableExportPlane(build(backend), _DropFrag(2, seed=4),
+                               max_retries=2)
+    run_all(plane, backend)
+    plane.drain()
+    assert plane.lost_cells() == {(2, e) for e in EPOCHS}
+    obs = plane.observability(EPOCHS)
+    assert obs["lost"] == [(2, e) for e in EPOCHS]
+    assert obs["observable_cells"] == (SW - 1) * len(EPOCHS)
+    # masked merge over a path containing the lost fragment equals the
+    # survivors-only oracle (exactly — min/median simply skip the cell)
+    oracle_sys, _ = oracle_cells(backend)
+    paths = [(1, 2, 3)] * len(KEYS)
+    est = plane.query_flows(KEYS, paths, EPOCHS, failures="mask")
+    ref = oracle_sys.query_flows(KEYS, [(1, 3)] * len(KEYS), EPOCHS,
+                                 failures="mask")
+    assert np.array_equal(est, ref)
+    # the oblivious policy instead merges the zeroed hold-back
+    obl = plane.query_flows(KEYS, paths, EPOCHS, failures="oblivious")
+    truth_gap_masked = np.abs(est - ref).max()
+    assert truth_gap_masked == 0.0
+    if backend == "fleet":
+        # zeros poison the min-merge: oblivious underestimates hard
+        assert (obl <= est).all() and (obl < est).any()
+
+
+def test_late_arrivals_sharpen_queries():
+    oracle_sys, _ = oracle_cells("loop")
+    plane = DurableExportPlane(
+        build("loop"), LossyChannel(delay=(4, 8), seed=5),
+        LossyChannel(seed=6), max_retries=8)
+    run_all(plane, "loop")
+    for _ in range(3):                 # some cells landed, some in flight
+        plane.step()
+    mid_pending = plane.observability(EPOCHS)["pending"]
+    assert mid_pending
+    plane.drain()
+    obs = plane.observability(EPOCHS)
+    assert obs["pending"] == [] and obs["lost"] == []
+    assert obs["scale"] == 1.0
+    est = plane.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    ref = oracle_sys.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    assert np.array_equal(est, ref)
+
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_observability_stamped_on_query(backend):
+    plane = DurableExportPlane(build(backend), *lossy(), max_retries=12)
+    run_all(plane, backend)
+    plane.drain()
+    plane.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    for holder in (plane, plane.system):
+        o = holder.last_observability
+        assert o is not None
+        assert o["epochs"] == 4 and o["scale"] == 1.0
+    assert plane.last_observability["pending"] == []
+    assert plane.last_observability["lost"] == []
+
+
+# -- collector crash / recovery --------------------------------------------
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_crash_recovery_bit_identity(backend, tmp_path):
+    oracle_sys, want = oracle_cells(backend)
+    plane = DurableExportPlane(build(backend), *lossy(seed=21),
+                               max_retries=12,
+                               ckpt_dir=str(tmp_path / "ck"))
+    run_all(plane, backend)
+    for _ in range(3):
+        plane.step()
+    step = plane.checkpoint()
+    n_committed = len(plane.collector.applied)
+    for _ in range(3):                 # cells applied+ACKed AFTER the
+        plane.step()                   # checkpoint: the at-least-once
+    #                                    crash window
+    n_at_crash = len(plane.collector.applied)
+    info = plane.crash()
+    assert info["restored_step"] == step
+    assert info["restored_cells"] == n_committed
+    assert info["dropped_cells"] == n_at_crash
+    # everything newer than the checkpoint must be retransmittable
+    assert len(info["restaged"]) >= n_at_crash - n_committed
+    plane.drain()
+    assert plane.lost_cells() == set() and plane.pending_cells() == set()
+    got = plane_cells(plane, backend)
+    for k in want:
+        assert np.array_equal(got[k], want[k]), k
+    est = plane.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    ref = oracle_sys.query_flows(KEYS, PATHS, EPOCHS, failures="mask")
+    assert np.array_equal(est, ref)
+
+
+def test_crash_without_checkpoint_dir_recovers_by_full_retransmit():
+    _, want = oracle_cells("loop")
+    plane = DurableExportPlane(build("loop"), *lossy(seed=22),
+                               max_retries=12)
+    run_all(plane, "loop")
+    for _ in range(4):
+        plane.step()
+    info = plane.crash()
+    assert info["restored_step"] is None and info["restored_cells"] == 0
+    plane.drain()
+    got = plane_cells(plane, "loop")
+    for k in want:
+        assert np.array_equal(got[k], want[k]), k
+
+
+def test_checkpoint_releases_committed_payloads(tmp_path):
+    plane = DurableExportPlane(build("loop"), ckpt_dir=str(tmp_path / "ck"),
+                               max_retries=4)
+    run_all(plane, "loop")
+    plane.drain()                      # lossless default channel
+    assert len(plane.collector.applied) == SW * 4
+    retained = sum(len(x.entries) for x in plane.exporters.values())
+    assert retained == SW * 4          # ACK alone never releases
+    plane.checkpoint()
+    assert sum(len(x.entries) for x in plane.exporters.values()) == 0
+
+
+def test_auto_checkpoint_cadence(tmp_path):
+    import os
+    plane = DurableExportPlane(build("loop"),
+                               LossyChannel(delay=(0, 3), seed=8),
+                               ckpt_dir=str(tmp_path / "ck"),
+                               ckpt_every=2, max_retries=4)
+    run_all(plane, "loop")
+    plane.drain()
+    assert plane._ckpt_step >= 1
+    steps = [n for n in os.listdir(str(tmp_path / "ck"))
+             if n.startswith("step_") and not n.endswith(".tmp")]
+    assert steps
+
+
+# -- Replayer composition ---------------------------------------------------
+
+def _small_workload():
+    from repro.net.topology import FatTree
+    from repro.net.traffic import gen_workload
+    topo = FatTree(4)
+    wl = gen_workload(topo, n_flows=400, total_packets=4_000, n_epochs=4,
+                      burstiness=0.2, seed=13)
+    return topo, wl
+
+
+def test_replayer_composes_churn_and_lossy_channel():
+    topo, wl = _small_workload()
+    rep = Replayer(wl, topo.n_switches)
+    sched = FailureSchedule(topo.n_switches, downs={3: (2, None)})
+    sys_ = DiSketchSystem({sw: 256 for sw in range(topo.n_switches)},
+                          "cms", rho_target=5.0, log2_te=wl.log2_te,
+                          backend="fleet",
+                          fleet_kwargs={"interpret": True})
+    plane = DurableExportPlane(sys_, *lossy(seed=31), max_retries=12)
+    rep.run(plane, window=2, failures=sched)
+    plane.drain()
+    # the dead switch's epochs were never sketched, so never staged
+    staged = {(sw, e) for sw, exp in plane.exporters.items()
+              for e in exp.entries}
+    assert not any(sw == 3 and e >= 2 for sw, e in staged)
+    assert not any(sw == 3 and e >= 2
+                   for sw, e in plane.collector.applied)
+    assert plane.lost_cells() == set()
+    est = plane.query_flows(wl.keys[:20], [wl.paths[i] for i in range(20)],
+                            list(range(4)), failures="mask")
+    assert np.isfinite(est).all()
+
+
+def test_replayer_packet_lru_invalidation():
+    topo, wl = _small_workload()
+    rep = Replayer(wl, topo.n_switches)
+    order = tuple(range(topo.n_switches))
+    p1 = rep.epoch_packet(0, order)
+    assert rep.epoch_packet(0, order) is p1        # LRU hit
+    assert rep.invalidate_packets([0]) == 1
+    p2 = rep.epoch_packet(0, order)
+    assert p2 is not p1                             # rebuilt
+    np.testing.assert_array_equal(p1.keys, p2.keys)
+    assert rep.invalidate_packets([5, 6]) == 0      # not cached: no-op
+
+
+def test_replayer_churn_results_unaffected_by_warm_cache():
+    # regression: a failure/recovery cycle must evict packed-epoch LRU
+    # entries, so a pre-warmed cache gives the same answer as a cold one
+    topo, wl = _small_workload()
+    mems = {sw: 256 for sw in range(topo.n_switches)}
+
+    def run_one(warm):
+        rep = Replayer(wl, topo.n_switches)
+        sys_ = DiSketchSystem(mems, "cms", rho_target=5.0,
+                              log2_te=wl.log2_te, backend="fleet",
+                              fleet_kwargs={"interpret": True})
+        if warm:
+            for e in range(wl.n_epochs):
+                rep.epoch_packet(e, sys_.fleet.frag_order)
+        sched = FailureSchedule(topo.n_switches, downs={1: (1, 3)})
+        rep.run(sys_, window=2, failures=sched)
+        return sys_.query_flows(wl.keys[:20],
+                                [wl.paths[i] for i in range(20)],
+                                list(range(4)), failures="mask")
+
+    assert np.array_equal(run_one(warm=False), run_one(warm=True))
+
+
+# -- chaos soak (slow) ------------------------------------------------------
+
+@pytest.mark.slow
+def test_chaos_soak_sweep(tmp_path):
+    """Drop x crash-point sweep: every configuration must drain to the
+    oracle bit for bit (or report its exact losses)."""
+    oracle_sys, want = oracle_cells("loop")
+    for p_drop in (0.1, 0.3, 0.5):
+        for crash_at in (2, 5, 9):
+            d = str(tmp_path / f"ck_{p_drop}_{crash_at}")
+            plane = DurableExportPlane(
+                build("loop"), *lossy(seed=40 + crash_at, p_drop=p_drop),
+                max_retries=16, ckpt_dir=d, ckpt_every=3)
+            run_all(plane, "loop")
+            for _ in range(crash_at):
+                plane.step()
+            plane.crash()
+            plane.drain()
+            assert plane.lost_cells() == set(), (p_drop, crash_at)
+            got = plane_cells(plane, "loop")
+            for k in want:
+                assert np.array_equal(got[k], want[k]), (p_drop,
+                                                         crash_at, k)

@@ -221,3 +221,76 @@ def test_select_geometry_respects_budget(width, n_sub, mode):
     assert blk % 128 == 0 and w_blk % 128 == 0
     assert w_blk <= max(1 << int(np.ceil(np.log2(max(width, 128)))), 128)
     assert vmem_bytes(blk, w_blk, n_sub, mode) <= VMEM_BUDGET_BYTES
+
+
+# -- durable export plane (PR 7) --------------------------------------------
+
+_EXPORT_SW = 3
+_EXPORT_EPOCHS = 2
+
+
+def _export_streams(epoch, seed):
+    from repro.core.disketch import SwitchStream
+    r = np.random.default_rng(seed)
+    return {sw: SwitchStream(
+        r.integers(0, 30, 40).astype(np.uint32),
+        np.ones(40, np.int64),
+        ((epoch << LOG2_TE)
+         + np.sort(r.integers(0, 1 << LOG2_TE, 40)).astype(np.int64)))
+        for sw in range(_EXPORT_SW)}
+
+
+def _export_system():
+    from repro.core.disketch import DiSketchSystem
+    return DiSketchSystem({sw: 128 for sw in range(_EXPORT_SW)}, "cms",
+                          rho_target=5.0, log2_te=LOG2_TE, backend="loop")
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.integers(0, 2**16), st.integers(0, 6))
+def test_export_drain_invariants(p_drop, p_dup, p_reorder, seed,
+                                 max_retries):
+    """For ANY seeded drop/dup/reorder/delay pattern and ANY retry
+    budget, a drained collector partitions the staged cells into
+    applied | lost exactly; applied cells are bit-identical to a
+    lossless oracle's; and a loss-free drain reproduces the oracle's
+    queries bit for bit."""
+    from repro.net.channel import LossyChannel
+    from repro.runtime.export import DurableExportPlane
+
+    oracle = _export_system()
+    for e in range(_EXPORT_EPOCHS):
+        oracle.run_epoch(e, _export_streams(e, 900 + e))
+    plane = DurableExportPlane(
+        _export_system(),
+        LossyChannel(p_drop=p_drop, p_dup=p_dup, p_reorder=p_reorder,
+                     delay=(0, 2), seed=seed),
+        LossyChannel(p_drop=0.5 * p_drop, p_dup=p_dup, seed=seed + 1),
+        max_retries=max_retries)
+    for e in range(_EXPORT_EPOCHS):
+        plane.run_epoch(e, _export_streams(e, 900 + e))
+    plane.drain()
+
+    staged = {(sw, e) for sw in range(_EXPORT_SW)
+              for e in range(_EXPORT_EPOCHS)}
+    applied = set(plane.collector.applied)
+    lost = plane.lost_cells()
+    assert applied | lost == staged
+    assert not (applied & lost)
+    assert plane.pending_cells() == set()
+    # exactly the exhausted, never-delivered cells are reported lost
+    assert lost == {(sw, e) for sw, exp in plane.exporters.items()
+                    for e in exp.exhausted_epochs()
+                    if (sw, e) not in applied}
+    for sw, e in applied:
+        assert np.array_equal(
+            np.asarray(plane.system.records[e][sw].counters),
+            np.asarray(oracle.records[e][sw].counters)), (sw, e)
+    if not lost:
+        keys = np.arange(30).astype(np.uint32)
+        paths = [tuple(range(_EXPORT_SW))] * len(keys)
+        epochs = list(range(_EXPORT_EPOCHS))
+        assert np.array_equal(
+            plane.query_flows(keys, paths, epochs, failures="mask"),
+            oracle.query_flows(keys, paths, epochs, failures="mask"))
