@@ -1,0 +1,189 @@
+"""Benchmark: chaos harness (every failure plane composed + checked).
+
+Two scenarios on a FatTree(4) replay, chained into
+``benchmarks.kernel_bench`` as a correctness gate (rows land in
+``BENCH_kernel.json``; a false ``chaos_ok`` fails CI):
+
+* **loss-free oracle** — the fully composed stack (versioned control
+  plane over the durable export plane) with every channel lossless, no
+  crashes, no churn, no pressure, must be *bit-identical* to a bare
+  oracle system — on both backends.  This pins the acceptance bar: the
+  planes may add machinery, but zero injected failure means zero
+  deviation.
+
+* **control-loss sweep** — churn + resource pressure + lossy export +
+  collector crashes held fixed while the control channel's drop rate
+  sweeps.  Records divergence-epochs (dispatches that ran a config
+  other than the controller's intent) and query RMSE vs the
+  control-loss rate.  ``chaos_ok`` asserts the machine-checked
+  invariants: the cell partition holds, the stale-config ledger is
+  exact, the applied-config twin reproduces every applied cell bit for
+  bit (lossy control never corrupts counters), and staleness is
+  monotonically accounted in ``observability``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit, memories_for
+
+
+def _export_channels(p_drop: float):
+    from repro.net.channel import LossyChannel
+
+    data = LossyChannel(p_drop=p_drop, p_dup=0.05, p_reorder=0.2,
+                        delay=(0, 2), seed=51)
+    ack = LossyChannel(p_drop=0.5 * p_drop, p_dup=0.05, delay=(0, 1),
+                      seed=52)
+    return data, ack
+
+
+def _control_channels(p_drop: float):
+    from repro.net.channel import LossyChannel
+
+    ctrl = LossyChannel(p_drop=p_drop, p_dup=0.1, p_reorder=0.3,
+                        delay=(0, 1), seed=53)
+    ack = LossyChannel(p_drop=0.5 * p_drop, p_dup=0.05, delay=(0, 1),
+                       seed=54)
+    return ctrl, ack
+
+
+def run(quick: bool = True):
+    from repro.core.disketch import DiSketchSystem, calibrate_rho_target
+    from repro.net.simulator import (ComposedSchedule, FailureSchedule,
+                                     Replayer, ResourcePressure, rmse)
+    from repro.net.topology import FatTree
+    from repro.runtime.chaos import ChaosHarness, ChaosInvariantError, \
+        cells_equal
+    from repro.runtime.control import VersionedControlPlane
+    from repro.runtime.export import DurableExportPlane
+    from repro.net.traffic import gen_workload
+
+    topo = FatTree(4)
+    n_epochs = 8 if quick else 16
+    wl = gen_workload(topo, n_flows=4_000 if quick else 50_000,
+                      total_packets=40_000 if quick else 500_000,
+                      n_epochs=n_epochs, burstiness=0.2, seed=11)
+    rng = np.random.RandomState(7)
+    # tight memory keeps the Eq. 6 loop active (n > 1), so control-
+    # plane loss has a real config trajectory to make stale
+    mems = memories_for(topo, 2 * 1024, 0.0, rng)
+    probe = Replayer(wl, topo.n_switches)
+    rho = calibrate_rho_target(mems, "cms",
+                               probe.epoch_stream(n_epochs // 2),
+                               wl.log2_te)
+    sel = wl.path_len == 5
+    keys, truth = wl.keys[sel], wl.sizes[sel]
+    paths = [p for p, s in zip(wl.paths, sel) if s]
+    epochs = list(range(n_epochs))
+    window = 4
+    total_pkts = len(wl.pkt_flow)
+
+    def make_system(backend):
+        kw = ({"fleet_kwargs": {"interpret": True}}
+              if backend == "fleet" else {})
+        return DiSketchSystem(mems, "cms", rho_target=rho,
+                              log2_te=wl.log2_te, backend=backend, **kw)
+
+    def query(sys_or_plane, backend, failures="mask"):
+        merge = "fragment" if backend == "fleet" else "subepoch"
+        return np.asarray(sys_or_plane.query_flows(
+            keys, paths, epochs, merge=merge, failures=failures))
+
+    def make_schedule():
+        # fixed churn + pressure background for the control-loss sweep
+        churn = FailureSchedule(
+            topo.n_switches,
+            downs={3: (3, 6), 9: (4, None)})
+        pressure = ResourcePressure(topo.n_switches, horizon=n_epochs,
+                                    seed=21, p_grab=0.3)
+        return ComposedSchedule([churn, pressure])
+
+    rows = []
+
+    # -- scenario A: loss-free composed stack == bare oracle ---------------
+    for backend in ("loop", "fleet"):
+        win = window if backend == "fleet" else 1
+        oracle = make_system(backend)
+        Replayer(wl, topo.n_switches).run(oracle, window=win)
+        est_oracle = query(oracle, backend)
+        plane = VersionedControlPlane(
+            DurableExportPlane(make_system(backend),
+                               steps_per_dispatch=0))
+        h = ChaosHarness(plane, steps_per_dispatch=4)
+        t0 = time.perf_counter()
+        Replayer(wl, topo.n_switches).run(h, window=win)
+        report = h.finish()
+        t_run = time.perf_counter() - t0
+        est = query(h, backend)
+        identical = bool(
+            np.array_equal(est, est_oracle)
+            and cells_equal(h.system, oracle, sorted(h.staged))
+            and not report["lost"] and not report["stale_epochs"])
+        rows.append({
+            "bench": "chaos", "scenario": "lossfree", "kind": "cms",
+            "backend": backend, "p_ctrl_drop": 0.0, "window": win,
+            "staged_cells": report["staged"],
+            "bit_identical_to_oracle": identical,
+            "n_stale_epochs": 0, "rmse": round(rmse(est, truth), 4),
+            "rmse_oracle": round(rmse(est_oracle, truth), 4),
+            "chaos_ok": identical,
+            "pkts_per_s": round(total_pkts / t_run),
+        })
+
+    # -- scenario B: divergence + RMSE vs control-loss rate ----------------
+    backend = "fleet"
+    oracle = make_system(backend)
+    Replayer(wl, topo.n_switches).run(oracle, window=window)
+    rmse_oracle = rmse(query(oracle, backend), truth)
+    ctrl_drops = [0.0, 0.3, 0.6] if quick else [0.0, 0.15, 0.3, 0.6, 0.9]
+    for p_ctrl in ctrl_drops:
+        plane = VersionedControlPlane(
+            DurableExportPlane(make_system(backend),
+                               *_export_channels(0.15),
+                               max_retries=8, steps_per_dispatch=0),
+            *_control_channels(p_ctrl))
+        h = ChaosHarness(plane, steps_per_dispatch=6, crash_every=2)
+        t0 = time.perf_counter()
+        invariants_ok = True
+        try:
+            Replayer(wl, topo.n_switches).run(
+                h, window=window, failures=make_schedule())
+            report = h.finish()
+            h.verify_config_twin(lambda: make_system(backend))
+        except ChaosInvariantError:
+            invariants_ok = False
+            report = {"staged": len(h.staged), "lost": [],
+                      "stale_epochs": [], "crashes": len(h.crash_log),
+                      "n_directives": 0, "n_clamps": 0}
+        t_run = time.perf_counter() - t0
+        est = query(h, backend)
+        stats = plane.stats()
+        rows.append({
+            "bench": "chaos", "scenario": "ctrl_loss", "kind": "cms",
+            "backend": backend, "p_ctrl_drop": p_ctrl, "window": window,
+            "staged_cells": report["staged"],
+            "n_lost": len(report["lost"]),
+            "n_crashes": report["crashes"],
+            "n_stale_epochs": len(report["stale_epochs"]),
+            "n_directives": report.get("n_directives", 0),
+            "n_clamps": report.get("n_clamps", 0),
+            "rmse": round(rmse(est, truth), 4),
+            "rmse_oracle": round(rmse_oracle, 4),
+            "ctrl_channel_sent": stats["channel"]["n_sent"],
+            "ctrl_channel_dropped": stats["channel"]["n_dropped"],
+            "chaos_ok": invariants_ok,
+            "pkts_per_s": round(total_pkts / t_run),
+        })
+
+    emit("chaos_lossfree",
+         [r for r in rows if r["scenario"] == "lossfree"])
+    emit("chaos_ctrl_loss",
+         [r for r in rows if r["scenario"] == "ctrl_loss"])
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -34,7 +34,7 @@ from .common import emit
 
 _MATCH_COLS = ("pallas_matches_ref", "fleet_matches_loop",
                "ragged_matches_dense", "query_matches_oracle",
-               "resilience_ok", "durability_ok")
+               "resilience_ok", "durability_ok", "chaos_ok")
 SCHEMA = 2
 #: headline metrics gated against the committed baseline (>20% drop fails)
 _GATED = ("ragged_pkts_per_s", "uniform_fleet_speedup_x")
@@ -115,6 +115,15 @@ def headline_from_rows(rows, quick: bool = True) -> dict:
                 h["durability_recovery_rounds"] = max(
                     h.get("durability_recovery_rounds", 0),
                     r["recovery_rounds"])
+        elif r.get("bench") == "chaos":
+            # composed failure planes (correctness-gated via chaos_ok,
+            # not perf-gated): worst config divergence + error under
+            # the lossiest control channel swept
+            if r.get("scenario") == "ctrl_loss":
+                h["chaos_stale_epochs"] = max(
+                    h.get("chaos_stale_epochs", 0), r["n_stale_epochs"])
+                h["chaos_worst_rmse"] = max(
+                    h.get("chaos_worst_rmse", 0.0), r["rmse"])
     return h
 
 
@@ -280,6 +289,7 @@ def run(quick: bool = True):
             "ref_pkts_per_s": round(p / t_ref),
         })
     emit("kernel_bench", [r for r in rows if r["bench"] == "single_kernel"])
+    from .chaos import run as run_chaos
     from .durability import run as run_durability
     from .resilience import run as run_resilience
 
@@ -287,7 +297,8 @@ def run(quick: bool = True):
             + run_query_plane(quick=quick)
             + run_univmon_fleet(quick=quick)
             + run_resilience(quick=quick)
-            + run_durability(quick=quick))
+            + run_durability(quick=quick)
+            + run_chaos(quick=quick))
     headline = headline_from_rows(rows, quick=quick)
     path = write_bench_json(rows, headline)
     print(f"headline: {json.dumps(headline)}")

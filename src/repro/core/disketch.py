@@ -90,9 +90,23 @@ class DiSketchSystem:
         # masked from every query path, and held out of the §4.2 control.
         self.dead: set = set()
         self._dead_at: Dict[int, frozenset] = {}   # epoch -> dead set
-        # Resource-reclaim shrinks arriving mid-window are deferred to
-        # the next dispatch boundary (widths are frozen per window).
-        self._pending_shrink: Dict[int, float] = {}
+        # Resource resizes (shrinks AND grows) arriving mid-window are
+        # deferred to the next dispatch boundary (widths are frozen per
+        # window); factors multiply while pending.
+        self._pending_resize: Dict[int, float] = {}
+        # Width each switch had when its most recent PEB was observed —
+        # a later resize makes that observation *stale*, and the §6
+        # re-equalization must converge against the width-clamped bound
+        # (see ``_reequalize_survivors``), not the raw stale number.
+        self._peb_width: Dict[int, int] = {}
+        # Re-equalization clamps surfaced to ``observability`` (the
+        # "intended vs applied under actual residual memory" record).
+        self.clamp_log: List[Dict] = []
+        # External control mode (``runtime.control.VersionedControlPlane``
+        # sets this): the system stops self-applying the Eq. 6 / §6
+        # control — ``ns`` holds whatever config the switches *actually
+        # applied*, and the (possibly lossy) control plane owns intent.
+        self.control_external = False
         # Observability accounting of the last query window (stamped by
         # query_flows / query_entropy; see ``observability``).
         self.last_observability: Optional[Dict] = None
@@ -107,19 +121,19 @@ class DiSketchSystem:
 
     # -- churn control plane -------------------------------------------------
 
-    def apply_event(self, event, *, defer_shrink: bool = False) -> None:
+    def apply_event(self, event, *, defer_resize: bool = False) -> None:
         """Apply one churn event to the control plane.
 
         ``event`` is duck-typed (``net.simulator.FailureEvent`` or any
-        object with ``.kind`` in {"fail", "shrink", "recover"},
+        object with ``.kind`` in {"fail", "shrink", "grow", "recover"},
         ``.switch``, and ``.factor``) so the core never imports the
         simulator.  "fail" reclaims the switch's sketch resource and
         triggers §6 re-equalization of the survivors; "recover" rejoins
         the switch as a fresh fragment at n_0 = 1 (§4.2 — its history is
-        gone with the reclaimed memory); "shrink" multiplies the
+        gone with the reclaimed memory); "shrink"/"grow" multiply the
         fragment's memory by ``event.factor`` — immediately, or deferred
-        to the next dispatch boundary when ``defer_shrink`` (widths are
-        frozen within a window).
+        to the next dispatch boundary when ``defer_resize`` (widths are
+        frozen within a window; grows and shrinks defer symmetrically).
         """
         sw = event.switch
         if sw not in self.fragments:
@@ -127,17 +141,18 @@ class DiSketchSystem:
         if event.kind == "fail":
             if sw not in self.dead:
                 self.dead.add(sw)
-                self._reequalize_survivors()
+                if not self.control_external:
+                    self._reequalize_survivors()
         elif event.kind == "recover":
             if sw in self.dead:
                 self.dead.discard(sw)
                 self.ns[sw] = 1
-        elif event.kind == "shrink":
-            if defer_shrink:
-                self._pending_shrink[sw] = (self._pending_shrink.get(sw, 1.0)
+        elif event.kind in ("shrink", "grow"):
+            if defer_resize:
+                self._pending_resize[sw] = (self._pending_resize.get(sw, 1.0)
                                             * event.factor)
             else:
-                self._apply_shrink(sw, event.factor)
+                self._apply_resize(sw, event.factor)
         else:
             raise ValueError(f"unknown churn event kind {event.kind!r}")
 
@@ -155,13 +170,35 @@ class DiSketchSystem:
         # ramp.  Survivors already inside the [rho/2, 2rho] band (and
         # switches with no observation yet) are untouched, so an
         # equalized fleet stays bit-identical after an off-path death.
+        #
+        # A survivor whose residual memory was resized *after* its last
+        # PEB observation must NOT converge against the raw stale
+        # number: the directive is clamped by the actual width, so
+        # converge_n runs against the width-scaled bound (Eq. 4 is
+        # ~1/width) and the clamp — intended vs applied — is surfaced
+        # through ``clamp_log`` into ``observability``.
         if not self.subepoching:
             return
         last = self._last_pebs()
         survivors = {sw: n for sw, n in self.ns.items() if sw not in self.dead}
-        self.ns.update(equalize.reequalize(survivors, last, self.rho_target))
+        intended = equalize.reequalize(survivors, last, self.rho_target)
+        applied = dict(intended)
+        for sw, n0 in survivors.items():
+            peb = last.get(sw)
+            w_obs = self._peb_width.get(sw)
+            w_now = self.fragments[sw].width
+            if peb is None or peb <= 0 or w_obs is None or w_obs == w_now:
+                continue
+            applied[sw] = equalize.converge_n(
+                n0, peb * (w_obs / w_now), self.rho_target)
+            if applied[sw] != intended[sw]:
+                self.clamp_log.append({
+                    "switch": sw, "at_epoch": len(self.peb_log),
+                    "n_intended": intended[sw], "n_applied": applied[sw],
+                    "width_observed": w_obs, "width_actual": w_now})
+        self.ns.update(applied)
 
-    def _apply_shrink(self, sw: int, factor: float) -> None:
+    def _apply_resize(self, sw: int, factor: float) -> None:
         from dataclasses import replace as dc_replace
 
         cfg = self.fragments[sw]
@@ -170,22 +207,24 @@ class DiSketchSystem:
         self.fragments[sw] = dc_replace(cfg, memory_bytes=new_mem)
         if self.fleet is not None:
             self.fleet.refresh_widths()
-        # Predictive §6 control: fewer columns concentrate the same load
-        # onto proportionally fewer counters, scaling the Eq. 4 bound by
-        # ~w_old/w_new.  Converge n against that prediction now; the
-        # next observed epoch corrects any modelling error through the
-        # ordinary Eq. 6 loop.
-        if self.subepoching and sw not in self.dead:
+        # Predictive §6 control: resizing the column count scales the
+        # per-counter load (and hence the Eq. 4 bound) by ~w_old/w_new —
+        # up for shrinks, down for grows.  Converge n against that
+        # prediction now; the next observed epoch corrects any modelling
+        # error through the ordinary Eq. 6 loop.  In external-control
+        # mode the (lossy) plane owns this adjustment instead.
+        if (self.subepoching and not self.control_external
+                and sw not in self.dead):
             last = self._last_pebs().get(sw)
             w_new = self.fragments[sw].width
             if last is not None and last > 0 and w_new != w_old:
                 self.ns[sw] = equalize.converge_n(
                     self.ns[sw], last * (w_old / w_new), self.rho_target)
 
-    def _apply_pending_shrinks(self) -> None:
-        for sw, factor in self._pending_shrink.items():
-            self._apply_shrink(sw, factor)
-        self._pending_shrink.clear()
+    def _apply_pending_resizes(self) -> None:
+        for sw, factor in self._pending_resize.items():
+            self._apply_resize(sw, factor)
+        self._pending_resize.clear()
 
     # -- data plane ----------------------------------------------------------
 
@@ -195,7 +234,7 @@ class DiSketchSystem:
         e.g. from ``Replayer.epoch_packet``) lets the fleet backend skip
         re-packing ``streams``; the loop backend ignores it.  ``events``
         are churn events taking effect at this epoch's start."""
-        self._apply_pending_shrinks()
+        self._apply_pending_resizes()
         for ev in (events or ()):
             self.apply_event(ev)
         if self.dead:
@@ -209,12 +248,14 @@ class DiSketchSystem:
                                               packet=packet, dead=self.dead)
         else:
             recs, pebs = self._run_epoch_loop(epoch, streams)
-        if self.subepoching:
+        if self.subepoching and not self.control_external:
             for sw, peb in pebs.items():
                 self.ns[sw] = equalize.next_n(self.ns[sw], peb,
                                               self.rho_target)
         self.records[epoch] = recs
         self.peb_log.append(pebs)
+        for sw in pebs:
+            self._peb_width[sw] = self.fragments[sw].width
         self.n_log.append(dict(self.ns))
 
     def _run_epoch_loop(self, epoch: int, streams: Dict[int, SwitchStream],
@@ -260,9 +301,10 @@ class DiSketchSystem:
         [0, e) as *lost* — the reclaimed memory held them; they are
         zeroed unless an XOR-parity group (``fleet_kwargs=
         {"parity_groups": ...}``) makes them recoverable.  Mid-window
-        shrink events defer to the next dispatch (widths are frozen per
-        window); fail/recover control effects (re-equalized survivors,
-        n reset) also land on the next dispatch for the same reason.
+        shrink/grow events defer to the next dispatch (widths are
+        frozen per window); fail/recover control effects (re-equalized
+        survivors, n reset) also land on the next dispatch for the same
+        reason.
         """
         if self.backend != "fleet":
             for e, streams in enumerate(streams_list):
@@ -276,7 +318,7 @@ class DiSketchSystem:
         if events_by_epoch is not None and len(events_by_epoch) != e_count:
             raise ValueError("events_by_epoch must have one entry per epoch "
                              f"({len(events_by_epoch)} != {e_count})")
-        self._apply_pending_shrinks()
+        self._apply_pending_resizes()
         for ev in (events_by_epoch[0] if events_by_epoch else ()):
             self.apply_event(ev)
         ns = (dict(self.ns) if self.subepoching
@@ -287,7 +329,7 @@ class DiSketchSystem:
             for ev in (events_by_epoch[e] if events_by_epoch else ()):
                 if ev.kind == "fail" and ev.switch not in self.dead:
                     fail_pts.append((e, ev.switch))
-                self.apply_event(ev, defer_shrink=True)
+                self.apply_event(ev, defer_resize=True)
             dead_sets.append(frozenset(self.dead))
         lost_sets: List[set] = [set() for _ in range(e_count)]
         for e, sw in fail_pts:
@@ -307,7 +349,9 @@ class DiSketchSystem:
                 self._dead_at.pop(epoch0 + e, None)
             self.records[epoch0 + e] = recs
             self.peb_log.append(pebs)
-            if self.subepoching:
+            for sw in pebs:
+                self._peb_width[sw] = self.fragments[sw].width
+            if self.subepoching and not self.control_external:
                 for sw, peb in pebs.items():
                     self.ns[sw] = equalize.next_n(self.ns[sw], peb,
                                                   self.rho_target)
@@ -341,7 +385,10 @@ class DiSketchSystem:
                 "scale": scale,
                 "observable_cells": sum(per_epoch.values()),
                 "total_cells": n_frags * len(epochs),
-                "per_epoch": per_epoch}
+                "per_epoch": per_epoch,
+                # §6 directives clamped by actual residual memory
+                # (intended vs applied config; see _reequalize_survivors)
+                "config_clamps": list(self.clamp_log)}
 
     def _valid(self, sw: int, epoch: int) -> bool:
         """Is (switch, epoch) a genuine observation?  Dead and lost

@@ -119,6 +119,16 @@ class LossyChannel:
         """Messages scheduled but not yet delivered."""
         return len(self._q)
 
+    def undelivered(self) -> List[Tuple[int, Any]]:
+        """In-flight messages as ``(deliver_round, msg)``, soonest first.
+
+        A drain loop that stops at round T must treat anything still
+        here as *undelivered* — delayed past the horizon, not lost on
+        the wire — and either extend the drain or account for it
+        explicitly.  Does not consume the queue.
+        """
+        return [(entry[0], entry[3]) for entry in sorted(self._q)]
+
     def clear(self) -> int:
         """Drop every in-flight message (a collector crash loses the
         wire); returns how many were lost."""

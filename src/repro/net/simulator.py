@@ -24,7 +24,9 @@ class FailureEvent:
 
     ``kind``: "fail" (sketch resource reclaimed — the switch keeps
     forwarding), "recover" (resource returned; the fragment restarts
-    fresh at n_0 = 1), or "shrink" (memory multiplied by ``factor``).
+    fresh at n_0 = 1), "shrink" (memory multiplied by ``factor`` <= 1),
+    or "grow" (memory multiplied by ``factor`` > 1 — a co-resident app
+    released SRAM back to the fragment).
     """
     epoch: int
     switch: int
@@ -80,10 +82,14 @@ class FailureSchedule:
                                  f"down epoch {d}")
         self._shrinks: Dict[int, List[FailureEvent]] = {}
         for ep, sw, factor in (shrinks or ()):
-            if not 0.0 < factor <= 1.0:
-                raise ValueError(f"shrink factor {factor} not in (0, 1]")
+            # factor <= 1 is a resource reclaim ("shrink"); factor > 1
+            # a resource release ("grow") — the bidirectional model of
+            # §6's "residual resources change over time".
+            if not factor > 0.0:
+                raise ValueError(f"resize factor {factor} must be > 0")
+            kind = "shrink" if factor <= 1.0 else "grow"
             self._shrinks.setdefault(int(ep), []).append(
-                FailureEvent(int(ep), int(sw), "shrink", float(factor)))
+                FailureEvent(int(ep), int(sw), kind, float(factor)))
         self.epoch_s = epoch_s
         self._clock = clock if clock is not None else _EpochClock(epoch_s)
         self._own_clock = clock is None
@@ -131,6 +137,85 @@ class FailureSchedule:
         victims = rng.choice(n_switches, size=k, replace=False)
         downs = {int(sw): (down_epoch, up_epoch) for sw in victims}
         return cls(n_switches, downs, **kw)
+
+
+class ResourcePressure:
+    """Time-varying resource contention from co-resident switch apps.
+
+    The paper's premise (§6) is that a fragment lives in *residual*
+    SRAM other in-network applications also claim.  This generator
+    models that bidirectionally: at each epoch a seeded per-switch
+    process may *grab* a fraction of the fragment's memory (a "shrink"
+    event with factor ``1 - grab``), hold it for a few epochs, then
+    *release* it (a "grow" event with the inverse factor ``1 / (1 -
+    grab)``).  At most one grab is in flight per switch.
+
+    Fully pregenerated at construction from ``seed`` — two instances
+    with the same arguments emit identical event streams, which is what
+    lets the chaos harness replay a run against a config twin.  Exposes
+    the same ``advance(epoch)`` interface as ``FailureSchedule``, so it
+    drives ``Replayer.run(..., failures=...)`` directly or composes via
+    ``ComposedSchedule``.
+
+    Note the integer-truncation caveat: memory is tracked in whole
+    bytes, so a grab/release cycle restores the original width only up
+    to ``int()`` truncation of the two multiplications.
+    """
+
+    def __init__(self, n_switches: int, *, horizon: int, seed: int = 0,
+                 p_grab: float = 0.15,
+                 grab_frac: Tuple[float, float] = (0.3, 0.7),
+                 hold: Tuple[int, int] = (1, 4)):
+        if not 0.0 <= p_grab <= 1.0:
+            raise ValueError(f"p_grab={p_grab} not in [0, 1]")
+        lo, hi = grab_frac
+        if not 0.0 < lo <= hi < 1.0:
+            raise ValueError(f"grab_frac range {grab_frac} not in (0, 1)")
+        h_lo, h_hi = int(hold[0]), int(hold[1])
+        if h_lo < 1 or h_hi < h_lo:
+            raise ValueError(f"hold range {hold} invalid")
+        self.n_switches = int(n_switches)
+        self.horizon = int(horizon)
+        rng = np.random.default_rng(seed)
+        self._events: Dict[int, List[FailureEvent]] = {}
+        for sw in range(self.n_switches):
+            busy_until = 0
+            for ep in range(self.horizon):
+                if ep < busy_until or rng.random() >= p_grab:
+                    continue
+                grab = float(rng.uniform(lo, hi))
+                release = ep + int(rng.integers(h_lo, h_hi + 1))
+                self._events.setdefault(ep, []).append(
+                    FailureEvent(ep, sw, "shrink", 1.0 - grab))
+                if release < self.horizon:
+                    self._events.setdefault(release, []).append(
+                        FailureEvent(release, sw, "grow",
+                                     1.0 / (1.0 - grab)))
+                busy_until = release
+        self.log: List[FailureEvent] = []
+
+    def advance(self, epoch: int) -> List[FailureEvent]:
+        events = list(self._events.get(int(epoch), ()))
+        self.log.extend(events)
+        return events
+
+
+class ComposedSchedule:
+    """Chain several event sources (``FailureSchedule``,
+    ``ResourcePressure``, ...) behind one ``advance(epoch)`` — the
+    chaos harness's way of running churn and resource pressure in the
+    same replay.  Events are emitted in schedule order per epoch."""
+
+    def __init__(self, schedules: Sequence):
+        self.schedules = list(schedules)
+        self.log: List[FailureEvent] = []
+
+    def advance(self, epoch: int) -> List[FailureEvent]:
+        events: List[FailureEvent] = []
+        for s in self.schedules:
+            events.extend(s.advance(epoch))
+        self.log.extend(events)
+        return events
 
 
 class Replayer:

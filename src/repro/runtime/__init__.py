@@ -1,3 +1,6 @@
+from .chaos import ChaosHarness, ChaosInvariantError, cells_equal
+from .control import (ConfigAck, ConfigDirective, SwitchConfigAgent,
+                      VersionedControlPlane)
 from .fault_tolerance import (HeartbeatMonitor, ElasticMesh,
                               StragglerPolicy, TrainingSupervisor)
 from .export import (AckMsg, Collector, DurableExportPlane, ExportMsg,
@@ -5,4 +8,7 @@ from .export import (AckMsg, Collector, DurableExportPlane, ExportMsg,
 
 __all__ = ["HeartbeatMonitor", "ElasticMesh", "StragglerPolicy",
            "TrainingSupervisor", "AckMsg", "Collector",
-           "DurableExportPlane", "ExportMsg", "SwitchExporter"]
+           "DurableExportPlane", "ExportMsg", "SwitchExporter",
+           "ConfigAck", "ConfigDirective", "SwitchConfigAgent",
+           "VersionedControlPlane", "ChaosHarness",
+           "ChaosInvariantError", "cells_equal"]

@@ -1,0 +1,157 @@
+"""Chaos harness suite: the composed failure stack under machine checks.
+
+Tier-1 tests run a small seeded scenario of the *fully composed* stack —
+versioned control plane over durable export plane over either backend —
+and assert the two acceptance bars:
+
+* loss-free composition is bit-identical to a bare oracle system, and
+* under churn + export loss + collector crashes + control loss +
+  resource pressure, every invariant holds: the staged-cell partition,
+  the stale-config ledger, and the applied-config twin (lossy control
+  never corrupts counters).
+
+The ``chaos``-marked soak sweeps seeds and loss rates; it is deselected
+by default (tier-1 runs ``-m 'not slow'``) and armed in CI's chaos job.
+"""
+import numpy as np
+import pytest
+
+from repro.core.disketch import DiSketchSystem
+from repro.net.channel import LossyChannel
+from repro.net.simulator import (ComposedSchedule, FailureSchedule,
+                                 Replayer, ResourcePressure)
+from repro.net.topology import FatTree
+from repro.net.traffic import gen_workload
+from repro.runtime.chaos import ChaosHarness, cells_equal
+from repro.runtime.control import VersionedControlPlane
+from repro.runtime.export import DurableExportPlane
+
+TOPO = FatTree(4)
+N_EPOCHS = 6
+WL = gen_workload(TOPO, n_flows=400, total_packets=6_000,
+                  n_epochs=N_EPOCHS, burstiness=0.2, seed=13)
+MEMS = {sw: 256 for sw in range(TOPO.n_switches)}
+RHO = 0.05
+EPOCHS = list(range(N_EPOCHS))
+
+
+def build(backend):
+    fk = {"interpret": True} if backend == "fleet" else None
+    return DiSketchSystem(MEMS, "cms", rho_target=RHO, log2_te=WL.log2_te,
+                          backend=backend, fleet_kwargs=fk)
+
+
+def compose(backend, p_export=0.0, p_ctrl=0.0, seed=40):
+    # p == 0 composes genuinely lossless (and jitter-free) channels —
+    # the loss-free scenario must not even delay a directive
+    exp_ch = (LossyChannel(p_drop=p_export, p_dup=0.1, p_reorder=0.2,
+                           delay=(0, 2), seed=seed),
+              LossyChannel(p_drop=0.5 * p_export, p_dup=0.1, delay=(0, 1),
+                           seed=seed + 1)) if p_export else (None, None)
+    ctl_ch = (LossyChannel(p_drop=p_ctrl, p_dup=0.1, p_reorder=0.3,
+                           delay=(0, 1), seed=seed + 2),
+              LossyChannel(p_drop=0.5 * p_ctrl, p_dup=0.1, delay=(0, 1),
+                           seed=seed + 3)) if p_ctrl else (None, None)
+    export = DurableExportPlane(build(backend), *exp_ch,
+                                max_retries=12, steps_per_dispatch=0)
+    return VersionedControlPlane(export, *ctl_ch)
+
+
+def query(target, backend):
+    merge = "fragment" if backend == "fleet" else "subepoch"
+    keys = WL.keys[:30]
+    paths = [WL.paths[i] for i in range(30)]
+    return np.asarray(target.query_flows(keys, paths, EPOCHS, merge=merge,
+                                         failures="mask"))
+
+
+def chaos_schedule(seed=21):
+    churn = FailureSchedule(TOPO.n_switches, downs={3: (2, 4),
+                                                    9: (3, None)})
+    pressure = ResourcePressure(TOPO.n_switches, horizon=N_EPOCHS,
+                                seed=seed, p_grab=0.3)
+    return ComposedSchedule([churn, pressure])
+
+
+# -- construction guards -----------------------------------------------------
+
+def test_harness_requires_snapshotable_export():
+    plane = DurableExportPlane(build("loop"), steps_per_dispatch=2)
+    with pytest.raises(ValueError, match="steps_per_dispatch=0"):
+        ChaosHarness(plane)
+
+
+def test_harness_crash_needs_export_plane():
+    with pytest.raises(ValueError, match="export plane"):
+        ChaosHarness(build("loop"), crash_every=2)
+
+
+# -- loss-free oracle --------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_lossfree_composed_stack_bit_identical_to_oracle(backend):
+    win = 2 if backend == "fleet" else 1
+    oracle = build(backend)
+    Replayer(WL, TOPO.n_switches).run(oracle, window=win)
+    h = ChaosHarness(compose(backend), steps_per_dispatch=4)
+    Replayer(WL, TOPO.n_switches).run(h, window=win)
+    report = h.finish()
+    assert not report["lost"] and not report["stale_epochs"]
+    assert report["staged"] == TOPO.n_switches * N_EPOCHS
+    assert cells_equal(h.system, oracle, sorted(h.staged))
+    assert np.array_equal(query(h, backend), query(oracle, backend))
+
+
+# -- everything armed at once ------------------------------------------------
+
+@pytest.mark.parametrize("backend,window", [("loop", 1), ("fleet", 2)])
+def test_full_chaos_invariants_and_twin(backend, window):
+    h = ChaosHarness(compose(backend, p_export=0.2, p_ctrl=0.5, seed=60),
+                     steps_per_dispatch=6, crash_every=2)
+    Replayer(WL, TOPO.n_switches).run(h, window=window,
+                                      failures=chaos_schedule())
+    report = h.finish()                   # partition + ledger checks
+    assert report["crashes"] >= 1
+    assert report["n_stale_epochs"] > 0   # control loss showed up...
+    n_cells = h.verify_config_twin(lambda: build(backend))
+    assert n_cells == report["applied"] > 0   # ...but corrupted nothing
+    # staleness and clamps ride observability on every query
+    assert np.isfinite(query(h, backend)).all()
+    obs = h.last_observability
+    assert obs["stale_config"] == h.control.stale_epochs()
+    assert obs["config_clamps"] == (list(h.system.clamp_log)
+                                    + list(h.control.clamp_log))
+
+
+def test_harness_over_bare_export_plane_checks_partition_only():
+    export = DurableExportPlane(
+        build("loop"), LossyChannel(p_drop=0.3, seed=5),
+        LossyChannel(seed=6), max_retries=12, steps_per_dispatch=0)
+    h = ChaosHarness(export, steps_per_dispatch=6, crash_every=3)
+    Replayer(WL, TOPO.n_switches).run(h, window=1)
+    report = h.finish()
+    assert h.control is None and "stale_epochs" not in report
+    assert report["applied"] + len(report["lost"]) == report["staged"]
+
+
+# -- soak (chaos-marked, deselected from tier-1) -----------------------------
+
+@pytest.mark.chaos
+@pytest.mark.slow
+def test_chaos_soak_seed_and_loss_sweep():
+    """Seed x control-loss sweep with every failure plane armed: all
+    invariants must hold at every point, and the twin must reproduce
+    every applied cell bit for bit."""
+    for seed in (1, 2, 3):
+        for p_ctrl in (0.3, 0.6, 0.9):
+            h = ChaosHarness(
+                compose("fleet", p_export=0.25, p_ctrl=p_ctrl,
+                        seed=100 * seed),
+                steps_per_dispatch=6, crash_every=2)
+            Replayer(WL, TOPO.n_switches).run(
+                h, window=2, failures=chaos_schedule(seed=seed))
+            report = h.finish()
+            h.verify_config_twin(lambda: build("fleet"))
+            assert np.isfinite(query(h, "fleet")).all(), (seed, p_ctrl)
+            assert (report["applied"] + len(report["lost"])
+                    == report["staged"]), (seed, p_ctrl)

@@ -1,0 +1,297 @@
+"""Versioned control plane suite: directive versioning, residual-memory
+clamps, lossy-channel reconciliation, and bit-identity.
+
+The two load-bearing claims:
+
+* **loss-free fidelity** — with lossless channels and the default
+  ``steps_per_dispatch=2``, the distributed control loop is
+  bit-identical to the oracle (in-process Eq. 6 / §6) on counters and
+  queries; and
+
+* **loss never corrupts counters** — under arbitrary drop/dup/reorder
+  on the control path, configs may go *stale* (recorded per epoch,
+  stamped in observability) but every counter matches a twin system
+  pinned to the *applied* config, exactly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import equalize
+from repro.core.disketch import DiscoSystem, DiSketchSystem, SwitchStream
+from repro.net.channel import LossyChannel
+from repro.net.simulator import FailureEvent
+from repro.runtime.control import (ConfigAck, ConfigDirective,
+                                   SwitchConfigAgent, VersionedControlPlane,
+                                   _pow2_clamp)
+
+SW = 4
+LOG2_TE = 10
+MEMS = {sw: 256 for sw in range(SW)}
+RHO = 0.05                  # tight target keeps the Eq. 6 loop active
+N_EPOCHS = 6
+KEYS = np.arange(40).astype(np.uint32)
+PATHS = [tuple(range(SW))] * len(KEYS)
+EPOCHS = list(range(N_EPOCHS))
+
+
+def streams_for(epoch, seed, n_pkts=200, n_keys=40):
+    r = np.random.default_rng(seed)
+    out = {}
+    for sw in range(SW):
+        keys = r.integers(0, n_keys, n_pkts).astype(np.uint32)
+        ts = ((epoch << LOG2_TE)
+              + np.sort(r.integers(0, 1 << LOG2_TE, n_pkts)).astype(
+                  np.int64))
+        out[sw] = SwitchStream(keys, np.ones(n_pkts, np.int64), ts)
+    return out
+
+
+STREAMS = [streams_for(e, 300 + e) for e in range(N_EPOCHS)]
+
+
+def build(backend="loop"):
+    fk = {"interpret": True} if backend == "fleet" else None
+    return DiSketchSystem(MEMS, "cms", rho_target=RHO, log2_te=LOG2_TE,
+                          backend=backend, fleet_kwargs=fk)
+
+
+def run_all(target, backend, events_at=None):
+    events_at = events_at or {}
+    if backend == "fleet":
+        for e0 in range(0, N_EPOCHS, 2):
+            evs = [events_at.get(e0), events_at.get(e0 + 1)]
+            target.run_window(e0, STREAMS[e0:e0 + 2],
+                              events_by_epoch=(evs if any(evs) else None))
+    else:
+        for e in range(N_EPOCHS):
+            target.run_epoch(e, STREAMS[e], events=events_at.get(e))
+
+
+def cells(system, backend):
+    if backend == "fleet":
+        fl = system.fleet
+        out = {}
+        for e in EPOCHS:
+            live = fl.frag_live(e)
+            for i, sw in enumerate(fl.frag_order):
+                if live is None or live[i]:
+                    out[(sw, e)] = np.asarray(fl.cell_counters(e, sw))
+        return out
+    return {(sw, e): np.asarray(rec.counters)
+            for e in EPOCHS for sw, rec in system.records[e].items()}
+
+
+def lossy_ctrl(seed=9, p_drop=0.4):
+    return (LossyChannel(p_drop=p_drop, p_dup=0.2, p_reorder=0.3,
+                         delay=(0, 1), seed=seed),
+            LossyChannel(p_drop=0.5 * p_drop, p_dup=0.2, delay=(0, 1),
+                         seed=seed + 1))
+
+
+# -- pow2 clamp --------------------------------------------------------------
+
+def test_pow2_clamp_exact():
+    assert _pow2_clamp(0.0) == 1
+    assert _pow2_clamp(1.0) == 1
+    assert _pow2_clamp(3.0) == 4          # round(log2 3) = 2
+    assert _pow2_clamp(6.0) == 8
+    assert _pow2_clamp(32.0) == 32
+    assert _pow2_clamp(float("inf")) == 1
+    assert _pow2_clamp(float("nan")) == 1
+    assert _pow2_clamp(1e12) == equalize.N_MAX
+
+
+# -- switch agent ------------------------------------------------------------
+
+def test_agent_highest_version_wins_and_reacks():
+    a = SwitchConfigAgent(0, n0=1, width0=64)
+    ack2 = a.on_directive(ConfigDirective(0, 2, 8, 64, 0.1), 64)
+    assert (a.version, a.n) == (2, 8) and ack2.n_applied == 8
+    # a stale reorder (v1) and a duplicate (v2) are no-ops but re-ACK
+    ack1 = a.on_directive(ConfigDirective(0, 1, 2, 64, 0.1), 64)
+    ackd = a.on_directive(ConfigDirective(0, 2, 8, 64, 0.1), 64)
+    assert (a.version, a.n) == (2, 8)
+    assert a.n_stale_dropped == 2 and a.n_applied_directives == 1
+    # every (re-)ACK carries a fresh monotone seq (fresh channel fate)
+    assert ack2.seq < ack1.seq < ackd.seq
+
+
+def test_agent_clamps_against_actual_width():
+    a = SwitchConfigAgent(0, n0=1, width0=256)
+    # directive computed for width 256, switch shrank to 64: Eq. 4 is
+    # ~1/width, so n is rescaled by 256/64 = 4x, pow2-rounded
+    ack = a.on_directive(ConfigDirective(0, 1, 8, 256, 0.1), 64)
+    assert a.n == _pow2_clamp(8 * 256 / 64) == 32
+    assert a.n_clamped == 1
+    # the applied config assumed width 256 but actual is 64: NACK state
+    assert ack.clamped and ack.width == 64
+    # a corrective directive carrying the true width stops the beacon
+    ack = a.on_directive(ConfigDirective(0, 2, 32, 64, 0.1), 64)
+    assert not ack.clamped and a.assumed_width == 64
+
+
+def test_agent_local_sync_adopts_out_of_band_state():
+    a = SwitchConfigAgent(0, n0=8, width0=256)
+    a.local_sync(1, 64)                   # recover restarted at n_0 = 1
+    assert a.n == 1 and a.assumed_width == 64
+    assert not a.ack(64).clamped
+
+
+# -- plane construction ------------------------------------------------------
+
+def test_plane_rejects_non_subepoching_system():
+    disco = DiscoSystem(MEMS, "cms", rho_target=RHO, log2_te=LOG2_TE)
+    with pytest.raises(ValueError, match="subepoching"):
+        VersionedControlPlane(disco)
+
+
+def test_plane_validation():
+    with pytest.raises(ValueError):
+        VersionedControlPlane(build(), max_retries=-1)
+    with pytest.raises(ValueError):
+        VersionedControlPlane(build(), backoff0=4, backoff_max=2)
+
+
+# -- loss-free bit-identity --------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_lossfree_plane_bit_identical_to_oracle(backend):
+    oracle = build(backend)
+    run_all(oracle, backend)
+    plane = VersionedControlPlane(build(backend))
+    run_all(plane, backend)
+    assert plane.n_directives > 0         # the loop actually engaged
+    assert plane.stale_epochs() == []     # ...and never ran stale
+    want, got = cells(oracle, backend), cells(plane.system, backend)
+    assert sorted(got) == sorted(want)
+    for k in want:
+        assert np.array_equal(got[k], want[k]), k
+    merge = "fragment" if backend == "fleet" else "subepoch"
+    assert np.array_equal(
+        plane.query_flows(KEYS, PATHS, EPOCHS, merge=merge),
+        oracle.query_flows(KEYS, PATHS, EPOCHS, merge=merge))
+    # as-run configs mirror the oracle's n trajectory, shifted one
+    # dispatch (applied_log[d] is what dispatch d ran; the oracle's
+    # n_log[d] is the post-update n for dispatch d+1)
+    if backend == "loop":
+        for d in range(1, N_EPOCHS):
+            assert plane.applied_log[d] == oracle.n_log[d - 1]
+
+
+# -- lossy control: stale configs, never corrupt counters --------------------
+
+def _twin_from_applied(plane, backend):
+    twin = build(backend)
+    twin.control_external = True
+    for d in range(N_EPOCHS if backend == "loop" else N_EPOCHS // 2):
+        twin.ns.update(plane.applied_log[d])
+        if backend == "fleet":
+            twin.run_window(2 * d, STREAMS[2 * d:2 * d + 2])
+        else:
+            twin.run_epoch(d, STREAMS[d])
+    return twin
+
+
+@pytest.mark.parametrize("backend", ["loop", "fleet"])
+def test_lossy_control_goes_stale_but_counters_match_applied_twin(backend):
+    plane = VersionedControlPlane(build(backend),
+                                  *lossy_ctrl(seed=17, p_drop=0.6))
+    run_all(plane, backend)
+    assert plane.stale_epochs()           # loss made configs run stale
+    twin = _twin_from_applied(plane, backend)
+    want, got = cells(twin, backend), cells(plane.system, backend)
+    assert sorted(got) == sorted(want)
+    for k in want:
+        assert np.array_equal(got[k], want[k]), k
+    # staleness is stamped into observability on every query
+    merge = "fragment" if backend == "fleet" else "subepoch"
+    plane.query_flows(KEYS, PATHS, EPOCHS, merge=merge)
+    obs = plane.last_observability
+    assert obs["stale_config"] == plane.stale_epochs()
+    assert obs["n_stale_config"] == len(plane.stale_epochs())
+    assert set(obs["stale_config_switches"]) == set(obs["stale_config"])
+
+
+def test_lossy_control_drains_to_convergence():
+    plane = VersionedControlPlane(build(), *lossy_ctrl(seed=23, p_drop=0.5))
+    run_all(plane, "loop")
+    plane.drain()
+    for sw, ent in plane.entries.items():
+        assert ent.outstanding is None
+        assert plane.agents[sw].n == ent.directed_n == ent.acked_n
+    assert max(plane.version_lag().values()) == 0
+    s = plane.stats()
+    assert s["n_outstanding"] == 0 and s["channel"]["n_dropped"] > 0
+
+
+# -- reconciliation ----------------------------------------------------------
+
+def test_stale_reordered_ack_is_dropped():
+    plane = VersionedControlPlane(build())
+    ent = plane.entries[0]
+    ent.version = ent.acked_seq = 0
+    fresh = ConfigAck(0, 1, 4, 256, False, seq=5)
+    stale = ConfigAck(0, 1, 2, 256, False, seq=3)
+    plane._reconcile(fresh)
+    assert ent.acked_n == 4 and ent.acked_seq == 5
+    plane._reconcile(stale)               # reordered older state: no-op
+    assert ent.acked_n == 4 and plane.n_stale_acks == 1
+
+
+def test_nack_beacon_reports_unsolicited_width_change():
+    plane = VersionedControlPlane(build(), nack_interval=1)
+    run_all(plane, "loop")
+    plane.drain()
+    # resource pressure shrinks switch 2 out-of-band: no directive
+    # commanded it, only the beacon can tell the controller
+    plane.system.apply_event(FailureEvent(N_EPOCHS, 2, "shrink", 0.25))
+    w_actual = int(plane.system.fragments[2].width)
+    assert plane.agents[2].assumed_width != w_actual
+    before = plane.n_nacks_tx
+    plane.drain()
+    assert plane.n_nacks_tx > before      # beacon fired
+    # reconciliation adopted the true width and re-converged n; the
+    # corrective directive carried it, stopping the beacon (quiescent)
+    assert plane.entries[2].believed_width == w_actual
+    assert plane.agents[2].assumed_width == w_actual
+    assert plane.agents[2].n == plane.entries[2].directed_n
+
+
+def test_exhausted_directive_reissued_next_dispatch():
+    # a black-hole control channel: every directive version exhausts its
+    # retry budget, but staleness stays *bounded* — each dispatch
+    # re-issues under a fresh version, and once the channel heals the
+    # fleet converges
+    plane = VersionedControlPlane(build(),
+                                  LossyChannel(p_drop=1.0, seed=3),
+                                  max_retries=2)
+    run_all(plane, "loop")
+    assert plane.stale_epochs()           # nothing ever arrived
+    v_first = max(e.version for e in plane.entries.values())
+    assert v_first > 1                    # re-issue kept the loop alive
+    assert all(a.n_applied_directives == 0 for a in plane.agents.values())
+    plane.channel = LossyChannel()        # channel heals
+    # give exhausted directives a dispatch boundary to be re-issued
+    plane._post_dispatch(0, {sw: a.n for sw, a in plane.agents.items()})
+    plane.drain()
+    for sw, ent in plane.entries.items():
+        assert plane.agents[sw].n == ent.directed_n
+
+
+# -- churn composition -------------------------------------------------------
+
+def test_recover_syncs_agent_and_controller():
+    plane = VersionedControlPlane(build())
+    run_all(plane, "loop",
+            events_at={2: [FailureEvent(2, 1, "fail")],
+                       4: [FailureEvent(4, 1, "recover")]})
+    plane.drain()
+    # the rejoin rides the boot path: agent holds the restart config
+    # (evolved by control since), controller agrees, nothing diverges
+    assert 1 not in plane.system.dead
+    assert plane.agents[1].n == plane.entries[1].directed_n
+    assert plane.applied_log[4][1] == 1   # restarted at n_0 = 1
+    # while dead, switch 1 is never counted stale
+    for e in plane.stale_epochs():
+        if 2 <= e < 4:
+            assert 1 not in plane._epoch_stale[e]

@@ -294,3 +294,94 @@ def test_export_drain_invariants(p_drop, p_dup, p_reorder, seed,
         assert np.array_equal(
             plane.query_flows(keys, paths, epochs, failures="mask"),
             oracle.query_flows(keys, paths, epochs, failures="mask"))
+
+
+# -- lossy channel semantics (PR 8) ------------------------------------------
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0), st.floats(0.0, 1.0),
+       st.integers(0, 2**16), st.integers(1, 24), st.integers(0, 4))
+def test_channel_delay_beyond_drain_reported_not_dropped(
+        p_drop, p_dup, p_reorder, seed, n_msgs, drain_round):
+    """For ANY channel parameters, a drain loop that stops at round T
+    must see every still-in-flight message in ``undelivered()`` —
+    delayed-past-the-horizon is an explicit state, never a silent drop.
+    Conservation holds at every round: sent - dropped + dup ==
+    delivered + pending."""
+    from repro.net.channel import LossyChannel
+    from repro.runtime.export import AckMsg
+
+    ch = LossyChannel(p_drop=p_drop, p_dup=p_dup, p_reorder=p_reorder,
+                      delay=(0, 3), seed=seed)
+    for i in range(n_msgs):
+        ch.send(AckMsg(frag=i % 5, epoch=i // 5, seq=i), now=i % 3)
+    delivered = []
+    for r in range(drain_round + 1):
+        delivered.extend(ch.deliver(r))
+    assert (ch.n_sent - ch.n_dropped + ch.n_dup
+            == ch.n_delivered + ch.pending())
+    und = ch.undelivered()
+    assert len(und) == ch.pending()
+    rounds = [r for r, _ in und]
+    assert rounds == sorted(rounds)            # soonest first
+    assert all(r > drain_round for r in rounds)  # due ones were popped
+    # extending the drain past the horizon delivers exactly them
+    if und:
+        late = ch.deliver(rounds[-1])
+        assert len(late) == len(und)
+        assert ch.pending() == 0 and ch.undelivered() == []
+
+
+# -- §6 re-equalization (PR 8) -----------------------------------------------
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.dictionaries(st.integers(0, 15),
+                       st.tuples(st.sampled_from([1, 2, 4, 8, 16, 64]),
+                                 st.floats(1e-3, 1e5)),
+                       min_size=1, max_size=8),
+       st.floats(1e-2, 1e4))
+def test_reequalize_properties(fleet, rho):
+    """§6 re-equalization, for ANY fleet state: (a) it touches subepoch
+    counts only — the per-switch set and every fragment's memory are
+    conserved; (b) each n_i is a power of two in [1, N_MAX] and is
+    monotone in that switch's PEB; (c) on a converged fleet (PEBs
+    updated under the peb * n/n' model) it is idempotent."""
+    from repro.core.equalize import N_MAX, converge_n, reequalize
+
+    ns = {sw: n for sw, (n, _) in fleet.items()}
+    pebs = {sw: p for sw, (_, p) in fleet.items()}
+    ns2 = reequalize(ns, pebs, rho)
+    assert set(ns2) == set(ns)                        # switch set conserved
+    for sw, n2 in ns2.items():
+        assert 1 <= n2 <= N_MAX and n2 & (n2 - 1) == 0
+        # monotone in PEB: a worse-bound fragment never subdivides less
+        assert converge_n(ns[sw], 2.0 * pebs[sw], rho) >= n2
+    # idempotent once the PEBs reflect the applied counts (Eq. 4 model:
+    # peb scales as n/n')
+    pebs2 = {sw: pebs[sw] * ns[sw] / ns2[sw] for sw in pebs}
+    assert reequalize(ns2, pebs2, rho) == ns2
+
+
+def test_reequalize_conserves_fleet_memory():
+    """System-level: §6 re-equalization after a death re-tunes subepoch
+    counts but never moves memory between switches — the survivors'
+    fragment bytes (and widths) are exactly what they were."""
+    from repro.core.disketch import DiSketchSystem
+    from repro.net.simulator import FailureEvent
+
+    s = DiSketchSystem({sw: 256 for sw in range(_EXPORT_SW)}, "cms",
+                       rho_target=0.05, log2_te=LOG2_TE)
+    for e in range(3):
+        s.run_epoch(e, _export_streams(e, 70 + e))
+    assert any(n > 1 for n in s.ns.values())  # Eq. 6 actually engaged
+    before = {sw: (cfg.memory_bytes, cfg.width)
+              for sw, cfg in s.fragments.items()}
+    ns_before = dict(s.ns)
+    s.apply_event(FailureEvent(2, 0, "fail"))
+    assert {sw: (cfg.memory_bytes, cfg.width)
+            for sw, cfg in s.fragments.items()} == before
+    assert set(s.ns) == set(ns_before)
+    changed = [sw for sw in s.ns if s.ns[sw] != ns_before[sw]]
+    assert 0 not in changed                 # the dead switch is held out

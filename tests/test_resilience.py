@@ -75,10 +75,11 @@ def test_schedule_detection_lag_with_slow_timeout():
     assert fails[3] == [FailureEvent(3, 4, "fail")]
 
 
-def test_schedule_emits_scripted_shrinks():
-    sched = FailureSchedule(SW, shrinks=[(2, 1, 0.5)])
+def test_schedule_emits_scripted_shrinks_and_grows():
+    sched = FailureSchedule(SW, shrinks=[(2, 1, 0.5), (3, 1, 2.0)])
     assert sched.advance(1) == []
     assert sched.advance(2) == [FailureEvent(2, 1, "shrink", 0.5)]
+    assert sched.advance(3) == [FailureEvent(3, 1, "grow", 2.0)]
 
 
 def test_schedule_validation():
@@ -86,8 +87,9 @@ def test_schedule_validation():
         FailureSchedule(SW, downs={SW: (1, None)})
     with pytest.raises(ValueError, match="must follow"):
         FailureSchedule(SW, downs={0: (3, 2)})
-    with pytest.raises(ValueError, match="factor"):
-        FailureSchedule(SW, shrinks=[(1, 0, 1.5)])
+    for bad in (0.0, -0.5):
+        with pytest.raises(ValueError, match="factor"):
+            FailureSchedule(SW, shrinks=[(1, 0, bad)])
 
 
 def test_parity_groups_chunked_validation():
@@ -324,6 +326,74 @@ def test_epoch_mode_shrink_applies_immediately():
     s.run_epoch(0, streams_for(0, 100),
                 events=[FailureEvent(0, 1, "shrink", 0.25)])
     assert s.fragments[1].width < w0
+
+
+def test_grow_event_restores_width_after_shrink():
+    s = build("loop")
+    w0 = s.fragments[1].width
+    s.run_epoch(0, streams_for(0, 100),
+                events=[FailureEvent(0, 1, "shrink", 0.5)])
+    assert s.fragments[1].width == w0 // 2
+    s.run_epoch(1, streams_for(1, 101),
+                events=[FailureEvent(1, 1, "grow", 2.0)])
+    assert s.fragments[1].width == w0
+
+
+def test_mid_window_grow_defers_to_next_dispatch():
+    # symmetric to the shrink defer rule: widths are frozen per window,
+    # so a mid-window grow lands at the next dispatch boundary
+    sls = [streams_for(e, 100 + e) for e in range(4)]
+    s = build("fleet")
+    w0 = s.fragments[1].width
+    s.run_window(0, sls, events_by_epoch=[
+        [], [FailureEvent(1, 1, "grow", 2.0)], [], []])
+    assert s.fragments[1].width == w0    # frozen within the window
+    s.run_epoch(4, streams_for(4, 104))  # boundary: grow lands
+    assert s.fragments[1].width == 2 * w0
+    assert int(s.fleet.widths[s.fleet._frag_pos[1]]) == \
+        s.fragments[1].width
+    est = s.query_flows(KEYS, [(1,)] * len(KEYS), EPOCHS)
+    assert np.isfinite(est).all()
+
+
+def test_grow_drops_n_via_predictive_control():
+    # doubling the columns halves the per-counter load (Eq. 4 ~ 1/w):
+    # the predictive §6 step should not *raise* n, and a large grow on
+    # a pressured fragment should lower it
+    s = build("loop", rho=0.5)
+    run_epochs(s, 2)
+    n_before = s.ns[1]
+    s.run_epoch(2, streams_for(2, 102),
+                events=[FailureEvent(2, 1, "grow", 8.0)])
+    assert s.n_log[-1][1] <= n_before
+
+
+def test_reequalize_clamps_against_resized_width():
+    # a shrink after the last PEB observation makes that observation
+    # stale; §6 re-equalization must converge against the width-scaled
+    # (clamped) bound and surface the clamp in observability
+    rho = 0.5
+    s = build("loop", rho=rho)
+    run_epochs(s, 2)
+    last_peb = {}
+    for pebs in s.peb_log:
+        last_peb.update(pebs)
+    w_obs = s.fragments[1].width
+    # apply_event directly: no dispatch between resize and fail, so the
+    # PEB observation for switch 1 predates the new width
+    s.apply_event(FailureEvent(2, 1, "shrink", 0.25))
+    w_now = s.fragments[1].width
+    n_at_fail = s.ns[1]
+    s.apply_event(FailureEvent(2, 2, "fail"))
+    expect = equalize.converge_n(n_at_fail,
+                                 last_peb[1] * (w_obs / w_now), rho)
+    assert s.ns[1] == expect
+    intended = equalize.converge_n(n_at_fail, last_peb[1], rho)
+    if expect != intended:
+        assert any(c["switch"] == 1 and c["n_applied"] == expect
+                   and c["n_intended"] == intended for c in s.clamp_log)
+        obs = s.observability([0, 1])
+        assert obs["config_clamps"] == s.clamp_log
 
 
 def test_aggregated_system_rejects_events():
