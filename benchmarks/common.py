@@ -10,7 +10,6 @@ from __future__ import annotations
 import csv
 import io
 import os
-import sys
 import time
 from typing import Dict, List
 

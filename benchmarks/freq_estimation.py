@@ -6,7 +6,6 @@ Reports RMSE over full-path (5-hop) flows, exactly as §6.1.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from .common import emit, fat_tree_scenario, full_path_queries, memories_for
 

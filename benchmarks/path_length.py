@@ -3,7 +3,6 @@
 in the heterogeneous Fat-Tree."""
 from __future__ import annotations
 
-import numpy as np
 
 from .common import emit, fat_tree_scenario, memories_for
 

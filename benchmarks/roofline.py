@@ -11,7 +11,6 @@ import glob
 import json
 import os
 
-import numpy as np
 
 from .common import emit
 

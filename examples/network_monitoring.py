@@ -11,7 +11,8 @@ against the per-record composite query.
 
     PYTHONPATH=src python examples/network_monitoring.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np

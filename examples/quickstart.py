@@ -3,7 +3,8 @@ query flow frequencies — the paper's Fig. 7 pipeline in ~60 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np

@@ -11,6 +11,16 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff + contract verifier) =="
+# ruff is a dev extra (requirements-dev.txt pins it for CI); skip with a
+# note when absent locally rather than failing the whole gate.
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks examples tools
+else
+    echo "ruff not installed; skipping (pip install -r requirements-dev.txt)"
+fi
+python -m tools.analysis
+
 echo "== collection check (all modules, including slow) =="
 python -m pytest -q -m "" --collect-only >/dev/null
 

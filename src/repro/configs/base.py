@@ -4,8 +4,8 @@ shape sets used by the dry-run and benchmarks."""
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
 _REGISTRY: Dict[str, "ModelConfig"] = {}
 

@@ -11,8 +11,7 @@ subepoch volume), matching switch SRAM cell widths.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Tuple
+from dataclasses import dataclass
 
 import numpy as np
 

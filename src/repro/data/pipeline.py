@@ -53,12 +53,13 @@ class SyntheticLM:
 
     def batch(self, step: int) -> Dict[str, np.ndarray]:
         b, s = self.batch_per_host, self.seq_len
-        base = (np.uint64(self.seed) << np.uint64(40)) \
-            + (np.uint64(self.host_id) << np.uint64(32)) \
-            + np.uint64(step)
+        # Weyl-sequence stream offset, wrapping mod 2^64 by construction.
+        # The product is taken in Python ints: numpy uint64 *scalar*
+        # multiplies raise RuntimeWarning on the intended wraparound.
+        base = (self.seed << 40) + (self.host_id << 32) + step
+        off = np.uint64((base * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF)
         n = b * (s + 1)
-        u = _mix64(np.arange(n, dtype=np.uint64)
-                   + base * np.uint64(0x9E3779B97F4A7C15))
+        u = _mix64(np.arange(n, dtype=np.uint64) + off)
         u = (u >> np.uint64(11)).astype(np.float64) / float(1 << 53)
         ids = self._perm[np.searchsorted(self._cdf, u).clip(0, self.vocab - 1)]
         ids = ids.reshape(b, s + 1).astype(np.int32)

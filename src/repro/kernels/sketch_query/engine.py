@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ... import sanitize
 from ...core import hashing as H
 from ..sketch_update.fleet import (PARAM_COL_SEED, PARAM_MIT, PARAM_N_SUB,
                                    PARAM_SIGN_SEED, PARAM_SUB_SEED,
@@ -144,6 +145,7 @@ def _gather_merge(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
     Passing the selection as data (rather than slicing rows out) keeps
     the compiled shape independent of the queried path.
     """
+    sanitize.note_trace("sketch_query._gather_merge")
     raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
                       mit_rows, keys, signed=kind in ("cs", "um"),
                       mitigate=mitigate)
@@ -219,18 +221,26 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     kb = key_bucket(n_keys)
     keys_pad = np.zeros(kb, np.uint32)
     keys_pad[:n_keys] = keys
-    out = _gather_merge(
-        jnp.asarray(stack),
-        jnp.asarray(params[:, :, PARAM_COL_SEED].astype(np.uint32)),
-        jnp.asarray(params[:, :, PARAM_SIGN_SEED].astype(np.uint32)),
-        jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
-        jnp.asarray(ns.astype(np.int32)),
-        jnp.asarray(widths.astype(np.int32)),
-        jnp.asarray(frag_sel), jnp.asarray(mit_rows),
-        jnp.asarray(keys_pad), kind=kind, mitigate=mitigate)
-    # the slice transfers K floats — the only counters-derived bytes that
-    # ever cross the host boundary on this path
-    return np.asarray(out[:n_keys]).astype(np.float64)
+    # Everything inside the guard is device compute with *explicit*
+    # boundary crossings only (jnp.asarray in, jax.device_get out):
+    # under REPRO_SANITIZE=1 any implicit transfer raises.  The padded
+    # (KB,) estimate vector is fetched whole and sliced host-side — an
+    # eager device-array slice would dispatch a dynamic_slice whose
+    # start index is itself an implicit host->device transfer.
+    with sanitize.transfer_guard():
+        out = _gather_merge(
+            jnp.asarray(stack),
+            jnp.asarray(params[:, :, PARAM_COL_SEED].astype(np.uint32)),
+            jnp.asarray(params[:, :, PARAM_SIGN_SEED].astype(np.uint32)),
+            jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
+            jnp.asarray(ns.astype(np.int32)),
+            jnp.asarray(widths.astype(np.int32)),
+            jnp.asarray(frag_sel), jnp.asarray(mit_rows),
+            jnp.asarray(keys_pad), kind=kind, mitigate=mitigate)
+        # KB floats across the boundary — the only counters-derived
+        # bytes that ever leave the device on this path
+        est = jax.device_get(out)
+    return est[:n_keys].astype(np.float64)
 
 
 @functools.partial(jax.jit, static_argnames=("n_levels",))
@@ -246,6 +256,7 @@ def _gather_merge_um(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
     *fragment* axis independently per level (``frag_sel`` is the (F,)
     on-path mask), and the window sum is O_Q = Sum(O) per level.
     """
+    sanitize.note_trace("sketch_query._gather_merge_um")
     e_count, n_rows = stack.shape[:2]
     n_frags = n_rows // n_levels
     raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
@@ -309,16 +320,21 @@ def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     kb = key_bucket(n_keys)
     keys_pad = np.zeros(kb, np.uint32)
     keys_pad[:n_keys] = keys
-    out = _gather_merge_um(
-        jnp.asarray(stack),
-        jnp.asarray(params[:, :, PARAM_COL_SEED].astype(np.uint32)),
-        jnp.asarray(params[:, :, PARAM_SIGN_SEED].astype(np.uint32)),
-        jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
-        jnp.asarray(ns.astype(np.int32)),
-        jnp.asarray(widths.astype(np.int32)),
-        jnp.asarray(frag_sel), jnp.asarray(keys_pad), n_levels=n_levels)
-    # (L, K) floats across the boundary — still no counter-stack bytes
-    return np.asarray(out[:, :n_keys]).astype(np.float64)
+    # Same explicit-boundary discipline as fleet_window_query_device:
+    # device compute under the (opt-in) transfer guard, one device_get
+    # out, host-side slicing.
+    with sanitize.transfer_guard():
+        out = _gather_merge_um(
+            jnp.asarray(stack),
+            jnp.asarray(params[:, :, PARAM_COL_SEED].astype(np.uint32)),
+            jnp.asarray(params[:, :, PARAM_SIGN_SEED].astype(np.uint32)),
+            jnp.asarray(params[:, :, PARAM_SUB_SEED].astype(np.uint32)),
+            jnp.asarray(ns.astype(np.int32)),
+            jnp.asarray(widths.astype(np.int32)),
+            jnp.asarray(frag_sel), jnp.asarray(keys_pad), n_levels=n_levels)
+        # (L, KB) floats across the boundary — no counter-stack bytes
+        est = jax.device_get(out)
+    return est[:, :n_keys].astype(np.float64)
 
 
 @functools.partial(jax.jit, static_argnames=("g", "k_heavy", "n_levels"))
@@ -326,6 +342,7 @@ def _um_gsum_jit(ests, lvl, *, g, k_heavy: int, n_levels: int):
     """Top-down UnivMon Y-recursion on device (mirrors
     ``core.query.um_gsum_combine``; the level loop is unrolled — L is
     small and static)."""
+    sanitize.note_trace("sketch_query._um_gsum_jit")
     y = jnp.float32(0.0)
     for l in range(n_levels - 1, -1, -1):
         sel = lvl >= l
@@ -363,6 +380,7 @@ def um_gsum_device(ests: np.ndarray, lvl: np.ndarray, g,
     if kb != n_keys:
         ests = np.pad(ests, ((0, 0), (0, kb - n_keys)))
         lvl = np.pad(lvl, (0, kb - n_keys), constant_values=-1)
-    return float(_um_gsum_jit(jnp.asarray(ests), jnp.asarray(lvl), g=g,
-                              k_heavy=int(k_heavy),
-                              n_levels=int(n_levels)))
+    with sanitize.transfer_guard():
+        y = _um_gsum_jit(jnp.asarray(ests), jnp.asarray(lvl), g=g,
+                         k_heavy=int(k_heavy), n_levels=int(n_levels))
+        return float(jax.device_get(y))

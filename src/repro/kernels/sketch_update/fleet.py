@@ -92,6 +92,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ... import sanitize
 from .kernel import (LANE, LVL_FIELD_MASK, LVL_SHIFT, block_contrib,
                      pow2_width_cap, resolve_interpret,
                      resolve_value_mode, select_geometry)
@@ -169,6 +170,10 @@ def fleet_update_pallas(keys, vals, ts, params, *, n_sub_max: int,
     """
     n_frags, p = keys.shape
     assert p % blk == 0 and padded_width % w_blk == 0
+    if isinstance(keys, jax.core.Tracer):
+        # Counts jit cache misses only (the wrapper is also callable
+        # eagerly, e.g. under eval_shape by the contract verifier).
+        sanitize.note_trace("sketch_update.fleet_update_pallas")
     grid = (n_frags, padded_width // w_blk, p // blk)
     j_rows = w_blk // LANE
     kernel = functools.partial(
@@ -312,6 +317,10 @@ def fleet_update_ragged_pallas(keys, vals, ts, params, block_frag, *,
     nb = block_frag.shape[0]
     assert keys.shape[0] == nb * blk and padded_width % w_blk == 0
     assert n_rows % n_levels == 0
+    if isinstance(keys, jax.core.Tracer):
+        # Retrace probe: bumps only when _fleet_update_ragged_jit
+        # misses its compile cache (see repro.sanitize).
+        sanitize.note_trace("sketch_update.fleet_update_ragged_pallas")
     grid = (n_levels, padded_width // w_blk, nb)
     j_rows = w_blk // LANE
     kernel = functools.partial(

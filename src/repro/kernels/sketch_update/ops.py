@@ -62,8 +62,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from ... import sanitize
 from .kernel import (check_output_peak, pow2_width_cap, resolve_interpret,
                      resolve_value_mode, select_geometry,
                      sketch_update_pallas)
@@ -99,6 +99,7 @@ def _sketch_update_jit(keys, vals, ts, *, width: int, n_sub: int,
                        sub_seed: int, signed: bool, blk: int, w_blk: int,
                        value_mode: str, level: int, mitigation: bool,
                        interpret: bool):
+    sanitize.note_trace("sketch_update._sketch_update_jit")
     keys = _pad_to(keys.astype(jnp.uint32), blk)
     vals = _pad_to(vals.astype(jnp.float32), blk)
     ts = _pad_to(ts.astype(jnp.uint32), blk)

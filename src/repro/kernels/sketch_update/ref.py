@@ -7,7 +7,6 @@ kernel.py).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .kernel import LVL_FIELD_MASK, LVL_SHIFT, SH_SHIFT, _hash_mod, _hash_u32

@@ -311,7 +311,6 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 def cells(mesh_kinds) -> list:
     out = []
     for arch in list_configs():
-        cfg = get_config(arch)
         for shape_name in SHAPES:
             if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
                 continue  # pure full-attention archs skip 512k decode

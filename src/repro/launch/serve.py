@@ -119,7 +119,7 @@ def main() -> None:
     lat = [r.t_done - r.t_enqueue for r in done if r.t_done]
     ttft = [r.t_first - r.t_enqueue for r in done if r.t_first]
     print(f"served {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / max(dt, 1e-9):.1f} tok/s)")
+          f"({toks / max(dt, 1e-9):.1f} tok/s, {steps} decode steps)")
     print(f"TTFT p50={np.percentile(ttft, 50):.3f}s "
           f"latency p50={np.percentile(lat, 50):.3f}s "
           f"p99={np.percentile(lat, 99):.3f}s")

@@ -18,7 +18,7 @@ unsharded.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

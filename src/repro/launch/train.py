@@ -2,19 +2,18 @@
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
         --steps 200 --batch 8 --seq 512 [--reduced] [--compress] \
-        [--ckpt-dir /tmp/ckpt] [--telemetry]
+        [--ckpt-dir /tmp/ckpt]
 
 On this CPU container use ``--reduced`` (tiny same-family config) — the
 full configs are exercised by the dry-run.  The driver wires together:
-data pipeline -> sharded train step -> DiSketch telemetry (gradient
-heavy-hitter sketching, §4 of the paper, disaggregated across the mesh)
--> checkpoint/restart (fault tolerance) -> metrics log.
+data pipeline -> sharded train step -> DiSketch gradient sketching
+(``--compress``: heavy-hitter compression, §4 of the paper applied to
+the gradient stream) -> checkpoint/restart (fault tolerance) ->
+metrics log.  Served-stream telemetry lives in examples/serve_llm.py.
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
@@ -35,8 +34,6 @@ def main() -> None:
                     choices=["cosine", "wsd"])
     ap.add_argument("--compress", action="store_true",
                     help="DiSketch gradient compression")
-    ap.add_argument("--telemetry", action="store_true",
-                    help="DiSketch gradient heavy-hitter telemetry")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -87,13 +84,6 @@ def main() -> None:
         if restored is not None:
             state, start = restored, int(rstep)
             print(f"restored checkpoint at step {start}")
-
-    telem = None
-    if args.telemetry:
-        from ..core.disketch import DiSketchSystem
-        # one fragment per (simulated) worker summarizing grad heavy hitters
-        telem = DiSketchSystem({0: 1 << 14, 1: 1 << 13}, "cs",
-                               rho_target=1.0, log2_te=10)
 
     data = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=args.seed)
     t0 = time.time()

@@ -15,7 +15,7 @@ inserts a small all-reduce per chunk, visible in the dry-run HLO.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

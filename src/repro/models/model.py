@@ -25,7 +25,7 @@ parameters live in per-layer dicts under ``params["layers"][i]``.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -89,7 +89,6 @@ def moe_ffn_gspmd(x, p, cfg, capacity_factor: float = 1.25
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    f = cfg.d_expert
     topw, topi, probs = route_topk(x, p["router"], k)
     aux = load_balance_loss(probs, topi, e)
 

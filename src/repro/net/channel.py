@@ -20,7 +20,7 @@ export of whatever the surviving switches sketched.
 from __future__ import annotations
 
 import heapq
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, Tuple
 
 import numpy as np
 

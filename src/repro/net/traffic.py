@@ -14,7 +14,7 @@ distributions (§6, footnote 4) and CoV-controlled lists (§6.3 / Fig. 15).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 from scipy import stats

@@ -56,7 +56,7 @@ Composes around the durability plane:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Sequence, Set
 
 from ..core import equalize

@@ -1,0 +1,92 @@
+"""Opt-in runtime sanitizers for the device data plane.
+
+Two machine-checked invariants back the repo's performance story, and
+both are easy to break silently:
+
+  * **Device residency** — the window counter stacks never cross the
+    host boundary; only (K,)-sized estimates do.  A stray implicit
+    transfer (a Python-scalar index, an eager slice of a device array)
+    still *works*, it just quietly reintroduces the bulk-transfer cost
+    the query plane exists to avoid.
+  * **Compile stability** — steady-state replay must hit the jit cache:
+    the shape-bucketing discipline (``pack_csr`` block buckets,
+    ``key_bucket`` pow2 key batches) exists so a long run triggers
+    O(log) compiles, not one per window.  A single unbucketed shape
+    turns every window into a retrace.
+
+Arm the sanitizers with ``REPRO_SANITIZE=1`` (read dynamically, so a
+test can flip it per-case):
+
+  * ``transfer_guard()`` — a context manager the query-plane entry
+    points (``repro.kernels.sketch_query.engine``) wrap around their
+    device compute.  Armed, it is ``jax.transfer_guard("disallow")``:
+    any *implicit* host<->device transfer raises, while the explicit
+    boundary crossings (``jnp.asarray`` in, ``jax.device_get`` out)
+    stay legal.  Disarmed it is a no-op null context.
+  * ``note_trace()`` / ``trace_snapshot()`` / ``traces_since()`` — a
+    retrace counter.  Jitted hot-path functions call
+    ``note_trace(name)`` in their *traced body*, so the count bumps
+    only on a jit cache miss (Python side effects do not re-run on
+    cache hits).  ``tests/test_sanitizers.py`` replays a multi-window
+    scenario twice and asserts the second pass adds zero traces.
+
+The counter is always on (it is a dict increment at trace time — trace
+frequency is exactly what it measures, so the overhead is by
+construction negligible); only the transfer guard is gated behind the
+env var, because ``jax.transfer_guard`` changes error behavior.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from collections import Counter
+from typing import Dict
+
+#: Cumulative per-callsite trace counts (name -> times traced).
+TRACE_COUNTS: Counter = Counter()
+
+_ENV = "REPRO_SANITIZE"
+
+
+def enabled() -> bool:
+    """Whether the sanitizers are armed (``REPRO_SANITIZE=1``).
+
+    Read dynamically on every call so tests can arm/disarm per-case via
+    ``monkeypatch.setenv`` without reimporting anything.
+    """
+    return os.environ.get(_ENV, "").strip() not in ("", "0")
+
+
+def transfer_guard():
+    """Context manager for the device query plane's compute section.
+
+    Armed: ``jax.transfer_guard("disallow")`` — implicit transfers
+    raise.  Disarmed: a null context.  jax is imported lazily so merely
+    importing this module stays dependency-free.
+    """
+    if not enabled():
+        return contextlib.nullcontext()
+    import jax
+    return jax.transfer_guard("disallow")
+
+
+def note_trace(name: str) -> None:
+    """Record one trace of the jitted function ``name``.
+
+    Call this *inside* the jitted body: the Python side effect executes
+    only while jax traces the function (a compile), never on a cached
+    call — which makes the counter a direct retrace probe.
+    """
+    TRACE_COUNTS[name] += 1
+
+
+def trace_snapshot() -> Dict[str, int]:
+    """Immutable snapshot of the current trace counts."""
+    return dict(TRACE_COUNTS)
+
+
+def traces_since(snapshot: Dict[str, int]) -> Dict[str, int]:
+    """Traces recorded after ``snapshot`` (name -> new trace count);
+    empty when every jitted call since hit the compile cache."""
+    return {k: v - snapshot.get(k, 0) for k, v in TRACE_COUNTS.items()
+            if v - snapshot.get(k, 0) > 0}

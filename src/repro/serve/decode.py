@@ -15,14 +15,12 @@ for ``long_500k`` (batch=1) the cache sequence axis shards over "data"
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..models import model as MDL
-from ..models.sharding import BATCH_AXES, MODEL_AXIS, shard
 
 
 def sample_greedy(logits):

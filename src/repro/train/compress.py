@@ -35,7 +35,6 @@ register, so the step counter IS the clock).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax

@@ -1,4 +1,7 @@
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+# Repo root, so tests can import the analysis plane (tools.analysis).
+sys.path.insert(0, os.path.join(_HERE, ".."))

@@ -1,6 +1,5 @@
 """Checkpoint tests: roundtrip, atomicity, integrity, pruning."""
 import os
-import shutil
 
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Data pipeline tests: determinism, shard files, restart semantics."""
 import numpy as np
-import pytest
 
 from repro.data.pipeline import ShardedTokenFiles, SyntheticLM
 

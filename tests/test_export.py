@@ -13,7 +13,7 @@ import pytest
 from repro.core.disketch import DiSketchSystem, SwitchStream
 from repro.net.channel import LossyChannel
 from repro.net.simulator import FailureSchedule, Replayer
-from repro.runtime.export import (AckMsg, DurableExportPlane, ExportMsg,
+from repro.runtime.export import (DurableExportPlane, ExportMsg,
                                   SwitchExporter)
 
 SW = 4

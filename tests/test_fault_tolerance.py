@@ -1,6 +1,5 @@
 """Fault-tolerance runtime tests: heartbeats, elastic re-mesh, straggler
 policy, the supervisor restart loop."""
-import numpy as np
 import pytest
 
 from repro.runtime.fault_tolerance import (ElasticMesh, HeartbeatMonitor,

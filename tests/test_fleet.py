@@ -9,9 +9,8 @@ import jax.numpy as jnp
 
 from repro.core import equalize, query as Q
 from repro.core.disketch import DiSketchSystem, DiscoSystem, SwitchStream
-from repro.core.fleet import (FleetEpochRunner, FleetPacket, build_params,
-                              pack_csr, pack_streams)
-from repro.core.fragment import FragmentConfig, process_epoch
+from repro.core.fleet import (FleetEpochRunner, FleetPacket, pack_csr)
+from repro.core.fragment import FragmentConfig
 from repro.kernels.sketch_update import fleet as FK
 from repro.net.simulator import Replayer
 from repro.net.traffic import cov_list, linear_path_workload

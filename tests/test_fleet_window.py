@@ -13,8 +13,7 @@ import pytest
 
 from repro.core import equalize
 from repro.core.disketch import DiSketchSystem, DiscoSystem, SwitchStream
-from repro.core.fleet import WindowRecords, pack_streams
-from repro.kernels.sketch_update import fleet as FK
+from repro.core.fleet import WindowRecords
 from repro.net.simulator import Replayer, rmse
 from repro.net.traffic import cov_list, linear_path_workload
 

@@ -1,11 +1,9 @@
 """Tests for sketch fragments + subepoching (core/fragment.py)."""
 import numpy as np
-import pytest
 
 from repro.core import hashing as H
-from repro.core.fragment import (EpochRecords, FragmentConfig,
-                                 monitored_mask, packet_subepoch,
-                                 process_epoch, frag_seed, _ROLE_SUB)
+from repro.core.fragment import (FragmentConfig, monitored_mask,
+                                 packet_subepoch, process_epoch)
 
 
 LOG2_TE = 12  # 4096 time units per epoch

@@ -1,6 +1,5 @@
 """Unit tests for the universal hash families (core/hashing.py)."""
 import numpy as np
-import pytest
 
 from repro.core import hashing as H
 

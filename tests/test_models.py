@@ -108,7 +108,7 @@ def test_gemma2_features_active():
 def test_moe_capacity_drops_are_bounded():
     """MoE: with capacity_factor >= 1.25 and balanced random tokens, the
     vast majority of assignments are kept."""
-    from repro.models.moe import moe_ffn, init_moe, route_topk
+    from repro.models.moe import moe_ffn, init_moe
     cfg = reduced(get_config("olmoe-1b-7b"))
     key = jax.random.PRNGKey(0)
     p = init_moe(key, cfg, dtype=jnp.float32)

@@ -94,7 +94,6 @@ def test_query_epoch_mass_conservation(seed, n, n_frag):
     """For a uniform-rate flow and CMS fragments with no collisions, the
     composite epoch estimate equals the true count regardless of the
     (n, fragment-count) combination."""
-    rng = np.random.RandomState(seed)
     true = 1 << LOG2_TE  # one packet per time unit
     keys = np.full(true, 12345, np.uint32)
     vals = np.ones(true, np.int64)

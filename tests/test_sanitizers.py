@@ -1,0 +1,121 @@
+"""Runtime sanitizers (repro.sanitize), armed via REPRO_SANITIZE=1.
+
+Two invariants, each with a positive control proving the sanitizer can
+actually fire:
+
+  * device residency — ``jax.transfer_guard("disallow")`` wraps the
+    query plane: a window-query round trip moves only the ``(K,)``
+    estimates, never an implicit scalar/stack transfer;
+  * compile stability — the trace counters in ``repro.sanitize`` bump
+    only on jit cache misses, and a second steady-state multi-window
+    replay (heterogeneous fragment widths, switch churn, window mode)
+    plus its queries must hit every compile cache: zero retraces.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import sanitize
+from repro.core.disketch import DiSketchSystem
+from repro.net.simulator import FailureSchedule, Replayer
+from repro.net.traffic import cov_list, linear_path_workload
+
+FLEET_KW = dict(blk=256, w_blk=512)
+N_HOPS = 5
+
+
+def _workload(seed=1, n_epochs=4):
+    rng = np.random.RandomState(seed)
+    widths = np.maximum(cov_list(N_HOPS, 1280, 1.2, rng).astype(int), 4)
+    mems = {h: int(w) * 4 for h, w in enumerate(widths)}
+    loads = np.maximum(cov_list(N_HOPS, 30_000, 0.9, rng).astype(int), 16)
+    wl = linear_path_workload(N_HOPS, eval_flows=100, eval_packets=800,
+                              bg_packets_per_hop=loads, n_epochs=n_epochs,
+                              seed=seed)
+    return wl, mems
+
+
+def _system(wl, mems):
+    return DiSketchSystem(mems, "cs", rho_target=4.0, log2_te=wl.log2_te,
+                          backend="fleet", fleet_kwargs=dict(FLEET_KW))
+
+
+# -- arming -----------------------------------------------------------------
+
+def test_disarmed_by_default(monkeypatch):
+    monkeypatch.delenv(sanitize._ENV, raising=False)
+    assert not sanitize.enabled()
+    x = jnp.arange(16)
+    with sanitize.transfer_guard():      # nullcontext: nothing enforced
+        assert int(np.asarray(x[:5])[-1]) == 4
+
+
+def test_armed_guard_catches_implicit_transfer(monkeypatch):
+    """Positive control: the guard can fire.  Eager slicing of a device
+    array dispatches dynamic_slice with a host int32 start index — the
+    exact class of silent transfer the query plane must never do."""
+    monkeypatch.setenv(sanitize._ENV, "1")
+    assert sanitize.enabled()
+    x = jnp.arange(16)
+    with pytest.raises(Exception, match="[Dd]isallowed.*transfer"):
+        with sanitize.transfer_guard():
+            _ = x[:5]
+    # Explicit D2H via jax.device_get is the sanctioned exit.
+    with sanitize.transfer_guard():
+        out = jax.device_get(x)
+    assert out[5] == 5
+
+
+def test_query_plane_clean_under_armed_guard(monkeypatch):
+    """The full device query plane (window + point queries on a churned
+    heterogeneous fleet) runs under the armed guard without tripping."""
+    monkeypatch.setenv(sanitize._ENV, "1")
+    wl, mems = _workload()
+    sched = FailureSchedule(N_HOPS, downs={3: (2, None)})
+    sysw = _system(wl, mems)
+    Replayer(wl, N_HOPS).run(sysw, window=4, failures=sched)
+    keys = wl.keys[:65]
+    est_w = sysw.fleet.window_query(list(range(wl.n_epochs)), keys)
+    est_p = sysw.fleet.point_query(0, keys, path=(2,))
+    assert np.isfinite(est_w).all() and np.isfinite(est_p).all()
+
+
+# -- zero-retrace -----------------------------------------------------------
+
+def _replay_and_query(wl, mems, window):
+    sched = FailureSchedule(N_HOPS, downs={3: (2, None), 0: (3, None)})
+    sysw = _system(wl, mems)
+    Replayer(wl, N_HOPS).run(sysw, window=window, failures=sched)
+    keys = wl.keys[:65]
+    epochs = list(range(wl.n_epochs))
+    return (sysw.fleet.window_query(epochs, keys),
+            sysw.fleet.point_query(0, keys, path=(2,)))
+
+
+def test_trace_counter_positive_control():
+    """The counter can fire: a fresh jit shape compiles exactly once and
+    replays from cache after."""
+    snap = sanitize.trace_snapshot()
+    wl, mems = _workload(seed=7, n_epochs=2)
+    _replay_and_query(wl, mems, window=2)
+    assert sanitize.traces_since(snap)   # something compiled
+
+
+def test_steady_state_replay_is_retrace_free(monkeypatch):
+    """Second identical multi-window replay — heterogeneous widths,
+    churn (two switches down mid-replay), window super-dispatch, window
+    + path-restricted point queries — must be served entirely from the
+    compile caches: zero retraces across update AND query planes."""
+    monkeypatch.setenv(sanitize._ENV, "1")
+    wl, mems = _workload()
+    warm = _replay_and_query(wl, mems, window=4)   # populate caches
+
+    snap = sanitize.trace_snapshot()
+    second = _replay_and_query(wl, mems, window=4)
+    delta = sanitize.traces_since(snap)
+    assert delta == {}, f"steady-state replay retraced: {delta}"
+    # and it is the same computation, not a degenerate cache hit
+    for a, b in zip(warm, second):
+        np.testing.assert_array_equal(a, b)

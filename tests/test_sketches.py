@@ -1,6 +1,5 @@
 """Unit tests for the aggregated sketches (core/sketches.py)."""
 import numpy as np
-import pytest
 
 from repro.core import sketches as S
 

@@ -8,8 +8,7 @@ from repro.core.disketch import (AggregatedSystem, DiSketchSystem,
                                  DiscoSystem, calibrate_rho_target)
 from repro.net.simulator import Replayer, nrmse, rmse
 from repro.net.topology import FatTree, SpineLeaf, core_on_path
-from repro.net.traffic import cov_list, gen_workload, gini_memories, \
-    linear_path_workload
+from repro.net.traffic import cov_list, gen_workload, linear_path_workload
 
 
 @pytest.fixture(scope="module")

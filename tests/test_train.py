@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.train.optimizer import (adamw_init, adamw_update,
                                    cosine_schedule, wsd_schedule)
-from repro.train.compress import CompressorState, DisketchCompressor
+from repro.train.compress import DisketchCompressor
 
 
 def test_adamw_minimizes_quadratic():

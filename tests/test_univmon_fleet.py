@@ -13,8 +13,8 @@ import pytest
 
 from repro.core import query as Q
 from repro.core.disketch import DiSketchSystem, SwitchStream
-from repro.core.fleet import (FleetEpochRunner, FleetPacket, build_params,
-                              fold_packet_flags, pack_csr, pack_streams)
+from repro.core.fleet import (FleetPacket, build_params,
+                              fold_packet_flags, pack_csr)
 from repro.core.fragment import FragmentConfig, level_seed_mix, process_epoch
 from repro.kernels.sketch_update import fleet as FK
 from repro.kernels.sketch_update.kernel import LVL_SHIFT, SH_SHIFT

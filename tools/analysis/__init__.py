@@ -1,0 +1,6 @@
+"""Static analysis plane: lint rules, abstract-eval contracts, dead code.
+
+Run as ``python -m tools.analysis`` from the repo root.  See
+docs/static-analysis.md for the rule catalog and suppression syntax.
+"""
+from .findings import RULES, Finding, render  # noqa: F401

@@ -1,0 +1,83 @@
+"""CLI for the static-analysis plane.
+
+Exit status is the CI contract: 0 when every enabled layer is clean,
+1 when any finding survives suppression.  Layers:
+
+  lint       AST rules over src/tests/benchmarks/examples/tools
+  contracts  abstract-eval geometry/packing/peak-guard verification
+             (imports jax + repro; skipped automatically if absent)
+  deadcode   import-graph reachability over src/repro
+
+``--skip lint,contracts`` disables layers (the analyzer's own fixture
+tests use ``--skip contracts,deadcode`` to lint a synthetic tree that
+has no kernels to verify).  ``--rules`` prints the catalog and exits.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List
+
+from .findings import RULES, Finding, render
+from .rules import run_lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="Contract verifier + sanitizer plane (static layers).")
+    ap.add_argument("--root", default=".",
+                    help="repo root to analyze (default: cwd)")
+    ap.add_argument("--skip", default="",
+                    help="comma-separated layers to skip "
+                         "(lint, contracts, deadcode)")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for rid in sorted(RULES):
+            print(f"{rid:16s} {RULES[rid]}")
+        return 0
+
+    root = os.path.abspath(args.root)
+    skip = {s.strip() for s in args.skip.split(",") if s.strip()}
+    findings: List[Finding] = []
+    notes: List[str] = []
+
+    if "lint" not in skip:
+        findings += run_lint(root)
+
+    if "contracts" not in skip:
+        # Contracts import jax and repro; make src/ importable from any
+        # --root so the layer works on checkouts without an install.
+        src = os.path.join(root, "src")
+        if src not in sys.path:
+            sys.path.insert(0, src)
+        try:
+            from .contracts import run_contracts
+            findings += run_contracts(root)
+        except ImportError as e:
+            notes.append(f"contracts layer skipped (missing dep: {e})")
+
+    if "deadcode" not in skip:
+        from .deadcode import run_deadcode
+        dead, dnotes = run_deadcode(root)
+        findings += dead
+        notes += dnotes
+
+    out = render(findings)
+    if out:
+        print(out)
+    for n in notes:
+        print(f"note: {n}")
+    if findings:
+        print(f"{len(findings)} finding(s).", file=sys.stderr)
+        return 1
+    print("analysis: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

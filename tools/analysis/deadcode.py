@@ -1,0 +1,168 @@
+"""Layer 3 (static): dead-module sweep over ``src/repro``.
+
+Builds the module import graph with ``ast`` only — no imports are
+executed — and flags any ``repro.*`` module unreachable from the
+shipped roots:
+
+  * every module under ``tests/``, ``benchmarks/``, ``examples/`` and
+    ``scripts/`` (the executable surface of the repo);
+  * the ``python -m`` entry points (``repro.launch.{train,serve,
+    dryrun}``) and the benchmark driver;
+  * string literals passed to ``__import__``/``importlib.import_module``
+    (the config zoo and benchmark registry are loaded this way).
+
+Edges follow ``import x``, ``from x import y`` (including the
+``y``-is-a-submodule case) and relative imports, resolved against the
+package layout on disk.  A package import pulls in its ``__init__``
+only — submodules must be named somewhere to count as live, which is
+exactly the property the ``configs.all_configs`` manifest exists to
+provide.
+
+Modules that are known-dead-but-kept are listed in ``QUARANTINE`` with
+the rationale; they are reported as notes, not findings, so the gate
+stays green while the decision stays visible in every report.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Set, Tuple
+
+from .findings import Finding
+
+#: Modules intentionally kept despite being unreachable from the
+#: executable roots.  Adding an entry here is the recorded decision;
+#: removing the file later just drops the entry.
+QUARANTINE: Dict[str, str] = {}
+
+#: ``python -m`` entry points and other roots with no static importer.
+ENTRY_POINTS = (
+    "repro.launch.train",
+    "repro.launch.serve",
+    "repro.launch.dryrun",
+)
+
+_ROOT_DIRS = ("tests", "benchmarks", "examples", "scripts")
+
+
+def _py_modules(src: str) -> Dict[str, str]:
+    """Map dotted module name -> file path for everything under src/."""
+    out = {}
+    for dirpath, dirnames, filenames in os.walk(src):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            rel = os.path.relpath(os.path.join(dirpath, fn), src)
+            parts = rel[:-3].replace(os.sep, "/").split("/")
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            out[".".join(parts)] = os.path.join(dirpath, fn)
+    return out
+
+
+def _edges(path: str, module: str, known: Set[str]) -> Set[str]:
+    """Modules ``module`` imports, restricted to ``known`` names."""
+    with open(path, encoding="utf-8") as fh:
+        try:
+            tree = ast.parse(fh.read(), filename=path)
+        except SyntaxError:
+            return set()
+    pkg_parts = module.split(".")
+    is_pkg = path.endswith("__init__.py")
+    out: Set[str] = set()
+
+    def add(name: str) -> None:
+        # Importing a.b.c marks a, a.b and a.b.c live (parent
+        # __init__ modules execute on import).
+        parts = name.split(".")
+        for i in range(1, len(parts) + 1):
+            cand = ".".join(parts[:i])
+            if cand in known:
+                out.add(cand)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = pkg_parts if is_pkg else pkg_parts[:-1]
+                base = base[:len(base) - (node.level - 1)]
+                prefix = ".".join(base + ([node.module]
+                                          if node.module else []))
+            else:
+                prefix = node.module or ""
+            if prefix:
+                add(prefix)
+            for a in node.names:
+                if a.name != "*":
+                    add(f"{prefix}.{a.name}" if prefix else a.name)
+        elif isinstance(node, ast.Call):
+            # __import__("x.y") / importlib.import_module("x.y") —
+            # only literal first arguments can be resolved statically.
+            fn = node.func
+            dyn = (isinstance(fn, ast.Name) and fn.id == "__import__") or \
+                  (isinstance(fn, ast.Attribute)
+                   and fn.attr == "import_module")
+            if dyn and node.args and \
+                    isinstance(node.args[0], ast.Constant) and \
+                    isinstance(node.args[0].value, str):
+                add(node.args[0].value)
+    return out
+
+
+def build_graph(root: str) -> Tuple[Dict[str, str], Dict[str, Set[str]],
+                                    Set[str]]:
+    """Return (modules, edges, roots) for the repo at ``root``."""
+    src = os.path.join(root, "src")
+    modules = _py_modules(src)
+    edges = {m: _edges(p, m, set(modules)) for m, p in modules.items()}
+
+    roots: Set[str] = set()
+    for m in ENTRY_POINTS:
+        if m in modules:
+            roots.add(m)
+    known = set(modules)
+    for d in _ROOT_DIRS:
+        top = os.path.join(root, d)
+        if not os.path.isdir(top):
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [x for x in dirnames if x != "__pycache__"]
+            for fn in filenames:
+                if fn.endswith(".py"):
+                    roots |= _edges(os.path.join(dirpath, fn),
+                                    f"{d}.{fn[:-3]}", known)
+    return modules, edges, roots
+
+
+def run_deadcode(root: str) -> Tuple[List[Finding], List[str]]:
+    """Return (findings, report-notes)."""
+    modules, edges, roots = build_graph(root)
+    live: Set[str] = set()
+    stack = [m for m in roots if m in modules]
+    while stack:
+        m = stack.pop()
+        if m in live:
+            continue
+        live.add(m)
+        stack.extend(edges.get(m, ()))
+
+    findings: List[Finding] = []
+    notes: List[str] = []
+    for m in sorted(set(modules) - live):
+        rel = os.path.relpath(modules[m], root).replace(os.sep, "/")
+        if m in QUARANTINE:
+            notes.append(f"quarantined: {m} ({rel}) — {QUARANTINE[m]}")
+        else:
+            findings.append(Finding(
+                "dead-module", rel, 1,
+                f"{m} is unreachable from tests/benchmarks/examples/"
+                "scripts or any entry point — delete it or record it "
+                "in tools.analysis.deadcode.QUARANTINE"))
+    for m, why in sorted(QUARANTINE.items()):
+        if m in live:
+            notes.append(f"stale quarantine entry: {m} is reachable "
+                         f"again (recorded reason: {why})")
+    return findings, notes

@@ -1,0 +1,102 @@
+"""Finding model shared by every analysis layer.
+
+A finding is one rule violation at one source location.  Rules are
+registered with a one-line rationale (printed by ``--rules`` and the
+docs catalog test); inline suppressions use
+
+    some_code()  # analysis: ignore[rule-id]
+    other()      # analysis: ignore[rule-a,rule-b]
+
+and apply to findings *on that physical line*.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterable, List
+
+#: rule id -> one-line rationale.  Every layer registers here so the
+#: catalog (docs/static-analysis.md, ``--rules``) has one source.
+RULES: Dict[str, str] = {
+    "host-transfer": (
+        "kernels/ must keep data device-resident; host materialization "
+        "(np.asarray/.host()/block_until_ready/jax.device_get) is legal "
+        "only in whitelisted boundary functions"),
+    "unseeded-random": (
+        "replay and crash-recovery bit-identity require every RNG in "
+        "net//runtime//core/ to be constructed from an explicit seed — "
+        "no global-state np.random.*/random.* and no default_rng()"),
+    "mutable-default": (
+        "mutable default arguments alias one object across calls; use "
+        "None + construct-in-body"),
+    "bare-except": (
+        "a bare `except:` swallows KeyboardInterrupt/SystemExit and "
+        "hides invariant violations; name the exception type"),
+    "silent-except": (
+        "`except Exception: pass` silently discards failures the "
+        "failure-plane tests rely on observing; handle or re-raise"),
+    "protocol-write": (
+        "control/export protocol fields named `version`/`seq` may only "
+        "move forward: increment, max-merge, guarded compare, or "
+        "__init__/dataclass initialization — anything else can roll a "
+        "switch back to stale config"),
+    "unused-import": (
+        "unused imports hide real dependencies and rot; emulates ruff "
+        "F401 so the gate holds even where ruff is not installed"),
+    "vmem-budget": (
+        "every shipped kernel geometry must fit the VMEM working-set "
+        "model (kernel.vmem_bytes <= VMEM_BUDGET_BYTES)"),
+    "pow2-width": (
+        "w_blk must stay a 128-aligned power of two capped at the "
+        "fragment's padded width (pow2_width_cap contract)"),
+    "packing": (
+        "the packed-ts layout requires log2_te <= 24 and n_levels <= 32 "
+        "(level id rides ts bits [24,29), single-hop flag bit 31)"),
+    "eval-shape": (
+        "pallas_call wrappers must abstract-eval to the documented "
+        "factored (rows, W/LANE, LANE) output layout without executing"),
+    "peak-guard": (
+        "every update path (pallas, ref, fleet runner) must route its "
+        "output through the 2^24 exact-integer peak guard"),
+    "syntax-error": (
+        "a file that does not parse hides every other finding in it "
+        "(and every test in its module)"),
+    "dead-module": (
+        "modules unreachable from any test/benchmark/example/script/"
+        "entry-point root are dead weight: delete or quarantine with a "
+        "recorded rationale"),
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str       # repo-root-relative, posix separators
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+_SUPPRESS_RE = re.compile(r"#\s*analysis:\s*ignore\[([a-z0-9_,\-\s]+)\]")
+
+
+def suppressions(source: str) -> Dict[int, set]:
+    """Per-line suppressed rule ids from ``# analysis: ignore[...]``."""
+    out: Dict[int, set] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def apply_suppressions(findings: Iterable[Finding],
+                       sup: Dict[int, set]) -> List[Finding]:
+    return [f for f in findings if f.rule not in sup.get(f.line, ())]
+
+
+def render(findings: Iterable[Finding]) -> str:
+    return "\n".join(str(f) for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.rule)))
