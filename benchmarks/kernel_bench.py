@@ -34,7 +34,8 @@ from .common import emit
 
 _MATCH_COLS = ("pallas_matches_ref", "fleet_matches_loop",
                "ragged_matches_dense", "query_matches_oracle",
-               "resilience_ok", "durability_ok", "chaos_ok")
+               "resilience_ok", "durability_ok", "chaos_ok",
+               "sharded_ok")
 SCHEMA = 2
 #: headline metrics gated against the committed baseline (>20% drop fails)
 _GATED = ("ragged_pkts_per_s", "uniform_fleet_speedup_x")
@@ -124,6 +125,16 @@ def headline_from_rows(rows, quick: bool = True) -> dict:
                     h.get("chaos_stale_epochs", 0), r["n_stale_epochs"])
                 h["chaos_worst_rmse"] = max(
                     h.get("chaos_worst_rmse", 0.0), r["rmse"])
+        elif r.get("bench") == "fleet_sharded":
+            # 245-switch fat-tree over an 8-way forced-host device mesh
+            # (correctness-gated via sharded_ok, not perf-gated: the
+            # forced devices share this host's cores, so scaling_x only
+            # tracks plumbing overhead here, not real parallelism)
+            if "pkts_per_s_8dev" in r:
+                h["sharded_n_switches"] = r["n_switches"]
+                h["sharded_pkts_per_s_1dev"] = r["pkts_per_s_1dev"]
+                h["sharded_pkts_per_s_8dev"] = r["pkts_per_s_8dev"]
+                h["sharded_scaling_x"] = r["scaling_x"]
     return h
 
 
@@ -292,13 +303,15 @@ def run(quick: bool = True):
     from .chaos import run as run_chaos
     from .durability import run as run_durability
     from .resilience import run as run_resilience
+    from .sharded import run as run_sharded
 
     rows = (rows + run_fleet(quick=quick) + run_fleet_ragged(quick=quick)
             + run_query_plane(quick=quick)
             + run_univmon_fleet(quick=quick)
             + run_resilience(quick=quick)
             + run_durability(quick=quick)
-            + run_chaos(quick=quick))
+            + run_chaos(quick=quick)
+            + run_sharded(quick=quick))
     headline = headline_from_rows(rows, quick=quick)
     path = write_bench_json(rows, headline)
     print(f"headline: {json.dumps(headline)}")

@@ -51,6 +51,13 @@ class DiSketchSystem:
         mitigation.  ``fleet_kwargs`` are forwarded to the runner (blk,
         w_blk, interpret, keep_stacked, layout).
 
+    ``mesh`` (fleet backend only) shards the fragment fleet over the
+    ``"switch"`` axis of a 1-D device mesh
+    (``launch.mesh.make_switch_mesh``): updates dispatch shard-locally,
+    window stacks live row-sharded across devices, and queries
+    all_gather only the gathered counter slices — bit-identical to the
+    single-device fleet (docs/sharding.md).
+
     The fleet backend additionally supports *window mode*
     (``run_window`` / ``Replayer.run(system, window=E)``): E consecutive
     epochs in one super-dispatch with the subepoch counts frozen per
@@ -66,7 +73,8 @@ class DiSketchSystem:
                  rho_target: float, log2_te: int, counter_bytes: int = 4,
                  mitigation: bool = False, n_levels: int = 16, seed: int = 0,
                  backend: str = "loop",
-                 fleet_kwargs: Optional[Dict] = None):
+                 fleet_kwargs: Optional[Dict] = None,
+                 mesh=None):
         self.kind = kind
         self.rho_target = rho_target
         self.log2_te = log2_te
@@ -112,12 +120,18 @@ class DiSketchSystem:
         self.last_observability: Optional[Dict] = None
         if backend not in ("loop", "fleet"):
             raise ValueError(f"unknown backend {backend!r}")
+        if mesh is not None and backend != "fleet":
+            raise ValueError(
+                "mesh sharding requires backend='fleet' (the loop "
+                "backend is per-switch host numpy)")
         self.backend = backend
         self.fleet: Optional["FleetEpochRunner"] = None
         if backend == "fleet":
             from .fleet import FleetEpochRunner
-            self.fleet = FleetEpochRunner(self.fragments, log2_te,
-                                          **(fleet_kwargs or {}))
+            kw = dict(fleet_kwargs or {})
+            if mesh is not None:
+                kw.setdefault("mesh", mesh)
+            self.fleet = FleetEpochRunner(self.fragments, log2_te, **kw)
 
     # -- churn control plane -------------------------------------------------
 

@@ -419,9 +419,14 @@ class _WindowBuffer:
     and window queries then never trigger the transfer at all.
     """
 
-    def __init__(self, dev, shape: Tuple[int, ...]):
+    def __init__(self, dev, shape: Tuple[int, ...],
+                 logical_rows: Optional[int] = None):
         self._dev = dev
         self._shape = shape
+        # Mesh-sharded stacks carry trailing pad rows (fragments padded
+        # so rows divide the switch axis); ``host()`` slices the pad off
+        # so the record plane and host oracle only ever see real rows.
+        self._rows = logical_rows
         self._host: Optional[np.ndarray] = None
 
     @property
@@ -436,15 +441,22 @@ class _WindowBuffer:
         anyway."""
         if self._dev is None:
             return None
-        import jax.numpy as jnp
+        if isinstance(self._dev, np.ndarray) \
+                or tuple(self._dev.shape) != tuple(self._shape):
+            import jax.numpy as jnp
 
-        self._dev = jnp.asarray(self._dev).reshape(self._shape)
+            # A mesh-sharded stack already has the right shape and must
+            # NOT be reshaped (that would drop its NamedSharding).
+            self._dev = jnp.asarray(self._dev).reshape(self._shape)
         return self._dev
 
     def host(self) -> np.ndarray:
         if self._host is None:
-            self._host = (np.asarray(self._dev).astype(np.int64)
-                          .reshape(self._shape))
+            arr = (np.asarray(self._dev).astype(np.int64)
+                   .reshape(self._shape))
+            if self._rows is not None and self._rows != self._shape[1]:
+                arr = np.ascontiguousarray(arr[:, :self._rows])
+            self._host = arr
             self._dev = None
         return self._host
 
@@ -562,7 +574,8 @@ class FleetEpochRunner:
                  interpret="auto", keep_stacked: bool = False,
                  layout: str = "ragged", value_mode: str = "auto",
                  group_by_n_sub: bool = True,
-                 parity_groups: Optional[Sequence[Sequence[int]]] = None):
+                 parity_groups: Optional[Sequence[Sequence[int]]] = None,
+                 mesh=None):
         from ..kernels.sketch_update.kernel import (LVL_FIELD_MASK,
                                                     LVL_SHIFT, SH_SHIFT)
 
@@ -670,6 +683,42 @@ class FleetEpochRunner:
                     self._group_of[i] = gi
                     idx.append(i)
                 self.parity_groups.append(np.asarray(idx, np.int64))
+        # --- device-mesh sharding (docs/sharding.md) --------------------
+        # The fleet shards over contiguous *fragment* blocks of a 1-D
+        # "switch" mesh axis: each shard packs + dispatches only its own
+        # fragments' packets (update stays fully local), the window
+        # stack is one row-sharded global array, and queries all_gather
+        # only the gathered counter slices (kernels.sketch_query).
+        self.mesh = mesh
+        self.n_shards = 1
+        self._frags_per_shard: Optional[int] = None
+        self._shard_frag_bounds: Optional[List[Tuple[int, int]]] = None
+        if mesh is not None:
+            if "switch" not in mesh.axis_names:
+                raise ValueError(
+                    "fleet mesh needs a 'switch' axis, got "
+                    f"{mesh.axis_names}")
+            if layout == "dense":
+                raise ValueError(
+                    "mesh sharding requires layout='ragged' (the dense "
+                    "rectangle is a single-device oracle)")
+            self.n_shards = int(mesh.shape["switch"])
+            n_frags = len(self.frag_order)
+            f_pad = -(-max(n_frags, 1) // self.n_shards) * self.n_shards
+            self._frags_per_shard = f_pad // self.n_shards
+            self._shard_frag_bounds = [
+                (s * self._frags_per_shard,
+                 min((s + 1) * self._frags_per_shard, n_frags))
+                for s in range(self.n_shards)]
+            if self.parity_groups is not None:
+                for gi, g in enumerate(self.parity_groups):
+                    shards = {int(i) // self._frags_per_shard for i in g}
+                    if len(shards) > 1:
+                        raise ValueError(
+                            f"parity group {gi} spans mesh shards "
+                            f"{sorted(shards)}: XOR recovery reads whole "
+                            "group rows, so groups must be shard-local "
+                            "under a device mesh (docs/sharding.md)")
         # Observability accounting of the last window query (stamped by
         # ``_liveness_sels`` on every query entry point): how many of
         # the queried epochs had a live on-path fragment, and the
@@ -743,6 +792,146 @@ class FleetEpochRunner:
         return FK.fleet_update_ragged(keys, vals, ts, params, block_frag,
                                       **kw)
 
+    # --- mesh-sharded dispatch (docs/sharding.md) ------------------------
+
+    def _shard_dispatch_blocks(self, params: np.ndarray,
+                               packets: Sequence[FleetPacket],
+                               n_sub_max: int, width_max: int):
+        """Yield ``(frag_lo, frag_hi, block)`` per non-empty shard, with
+        ``block`` the shard's ``(E, (hi-lo)*L, S, W)`` f32 counters.
+
+        Packets are routed at pack time (``FleetPacket.select`` of the
+        shard's contiguous fragment positions) and each shard runs the
+        ordinary grouped/flag-folding dispatch over its own rows only —
+        per-row counters are bit-identical to the single-device launch
+        by the same argument as ``dispatch_ragged_grouped``: a smaller
+        launch only changes *which* zero rows/columns are materialized,
+        never the hash arithmetic of a real row.
+        """
+        e_count = len(packets)
+        n_frags = len(self.frag_order)
+        L = self.n_levels
+        for lo, hi in self._shard_frag_bounds:
+            if lo >= hi:
+                continue
+            idx = np.arange(lo, hi)
+            rows = ((np.arange(e_count)[:, None] * n_frags
+                     + idx[None, :]).ravel()[:, None] * L
+                    + np.arange(L)[None, :]).ravel()
+            sub = [p.select(idx) for p in packets]
+            blk = np.asarray(self._dispatch(params[rows], sub,
+                                            n_sub_max, width_max),
+                             np.float32)
+            yield lo, hi, blk.reshape(e_count, (hi - lo) * L,
+                                      n_sub_max, width_max)
+
+    def _dispatch_mesh_host(self, params: np.ndarray,
+                            packets: Sequence[FleetPacket],
+                            n_sub_max: int, width_max: int) -> np.ndarray:
+        """Per-epoch mesh leg: shard-local dispatches concatenated back
+        to one host ``(n_rows, S, W)`` stack (``run_epoch`` is the
+        host-centric path — per-epoch records materialize immediately,
+        so there is nothing to keep sharded)."""
+        e_count = len(packets)
+        L = self.n_levels
+        rows_per_epoch = len(self.frag_order) * L
+        out = np.zeros((e_count, rows_per_epoch, n_sub_max, width_max),
+                       np.float32)
+        for lo, hi, blk in self._shard_dispatch_blocks(
+                params, packets, n_sub_max, width_max):
+            out[:, lo * L:hi * L] = blk
+        return out.reshape(e_count * rows_per_epoch, n_sub_max, width_max)
+
+    def _assemble_sharded(self, blocks: List[np.ndarray], e_count: int,
+                          n_sub_max: int, width_max: int):
+        """Commit per-shard blocks to their mesh devices as ONE global
+        row-sharded ``(E, R_pad, S, W)`` array (zero rows pad the last /
+        empty shards up to ``frags_per_shard``).  Built with
+        ``make_array_from_single_device_arrays`` so no global host
+        rectangle beyond the per-shard blocks is ever materialized."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        L = self.n_levels
+        rps = self._frags_per_shard * L
+        shape = (e_count, self.n_shards * rps, n_sub_max, width_max)
+        sharding = NamedSharding(self.mesh, P(None, "switch", None, None))
+        padded = []
+        for blk in blocks:
+            if blk.shape[1] != rps:
+                blk = np.pad(blk, ((0, 0), (0, rps - blk.shape[1]),
+                                   (0, 0), (0, 0)))
+            padded.append(np.ascontiguousarray(blk, np.float32))
+        arrays = []
+        for d, idx in sharding.addressable_devices_indices_map(
+                shape).items():
+            s = (idx[1].start or 0) // rps
+            arrays.append(jax.device_put(padded[s], d))
+        return jax.make_array_from_single_device_arrays(shape, sharding,
+                                                        arrays)
+
+    def _run_window_mesh(self, params: np.ndarray,
+                         packets: Sequence[FleetPacket],
+                         lost_sets: Sequence[set], n_arr: np.ndarray,
+                         e_count: int, n_sub_max: int, width_max: int):
+        """Mesh leg of ``run_window``: shard-local dispatch, with the
+        peak / §4.2 PEBs / XOR parity / lost-row zeroing all computed on
+        the per-shard blocks BEFORE the global sharded stack is
+        assembled — nothing row-global ever crosses a device boundary.
+        Returns ``(buf, pebs_all, parity_by_epoch, peak)``."""
+        L = self.n_levels
+        n_frags = len(self.frag_order)
+        rows_per_epoch = n_frags * L
+        blocks = [np.zeros((e_count, 0, n_sub_max, width_max), np.float32)
+                  for _ in range(self.n_shards)]
+        peak = 0.0
+        pebs_all = np.zeros((e_count, n_frags))
+        for lo, hi, blk in self._shard_dispatch_blocks(
+                params, packets, n_sub_max, width_max):
+            s = lo // self._frags_per_shard
+            peak = max(peak, float(np.abs(blk).max(initial=0.0)))
+            # §4.2 PEBs from the shard's level-0 rows (same formula as
+            # the single-device path, evaluated per shard block).
+            flat = blk.reshape(e_count * (hi - lo) * L,
+                               n_sub_max, width_max)
+            pebs_all[:, lo:hi] = np.asarray(equalize.peb_fleet_device(
+                flat[::L], np.tile(n_arr[lo:hi], e_count),
+                np.tile(self.widths[lo:hi], e_count),
+                self.kind)).reshape(e_count, hi - lo)
+            blocks[s] = blk
+        # XOR parity per (epoch, group) before zeroing lost rows; groups
+        # are shard-local (enforced at construction), so each reads one
+        # shard's block only.
+        parity_by_epoch = None
+        if self.parity_groups is not None:
+            per_group = []
+            for g in self.parity_groups:
+                s = int(g[0]) // self._frags_per_shard
+                lo = self._shard_frag_bounds[s][0]
+                acc = None
+                for i in g:
+                    j = int(i) - lo
+                    cell = blocks[s][:, j * L:(j + 1) * L].astype(np.int32)
+                    acc = cell if acc is None else acc ^ cell
+                per_group.append(acc)               # (E, L, S, W) int32
+            parity_by_epoch = [[pg[e] for pg in per_group]
+                               for e in range(e_count)]
+        for e, lost in enumerate(lost_sets):
+            for sw in lost:
+                i = self._frag_pos[sw]
+                s = i // self._frags_per_shard
+                j = i - self._shard_frag_bounds[s][0]
+                if not blocks[s].flags.writeable:
+                    # np.asarray of a device output is a read-only view
+                    blocks[s] = blocks[s].copy()
+                blocks[s][e, j * L:(j + 1) * L] = 0.0
+        out = self._assemble_sharded(blocks, e_count, n_sub_max, width_max)
+        buf = _WindowBuffer(
+            out, (e_count, self._frags_per_shard * self.n_shards * L,
+                  n_sub_max, width_max),
+            logical_rows=rows_per_epoch)
+        return buf, pebs_all, parity_by_epoch, peak
+
     def refresh_widths(self) -> None:
         """Recompute the cached width vectors after a resource-reclaim
         shrink replaced a ``FragmentConfig``.  Past epochs are
@@ -777,8 +966,12 @@ class FleetEpochRunner:
         n_sub_max = int(n_arr.max(initial=1))
         width_max = int(self.widths.max(initial=4))
 
-        stacked_f32 = np.asarray(self._dispatch(params, [packet],
-                                                n_sub_max, width_max))
+        if self.mesh is None:
+            stacked_f32 = np.asarray(self._dispatch(params, [packet],
+                                                    n_sub_max, width_max))
+        else:
+            stacked_f32 = self._dispatch_mesh_host(params, [packet],
+                                                   n_sub_max, width_max)
         self._check_output_peak(float(np.abs(stacked_f32).max(initial=0.0)))
         stacked = stacked_f32.astype(np.int64)
 
@@ -878,35 +1071,44 @@ class FleetEpochRunner:
         n_sub_max = int(params[:, PARAM_N_SUB].max(initial=1))
         width_max = int(self.widths.max(initial=4))
 
-        out = self._dispatch(params, packets, n_sub_max, width_max)
-        self._check_output_peak(
-            float(jnp.max(jnp.abs(out))) if out.size else 0.0)
-        # §4.2 PEBs from the level-0 rows (::L is a no-op for cs/cms) —
-        # computed before lost cells are zeroed (their counters are
-        # genuine observations of epochs the switch did sketch).
-        pebs_all = np.asarray(equalize.peb_fleet_device(
-            out[::L], np.tile(n_arr, e_count), np.tile(self.widths, e_count),
-            self.kind)).reshape(e_count, n_frags)
-        # XOR parity per (epoch, group) over the un-zeroed stack: exact
-        # integers below 2^24 make the f32->int32 conversion lossless,
-        # and XOR (unlike a sum) can neither overflow nor round.
-        parity_by_epoch = None
-        if self.parity_groups is not None:
-            parity_by_epoch = self._window_parity(
-                out, e_count, rows_per_epoch, n_sub_max, width_max)
-        if any(lost_sets):
-            rows = np.concatenate([
-                np.arange(i * L, (i + 1) * L) + e * rows_per_epoch
-                for e, lost in enumerate(lost_sets)
-                for i in sorted(self._frag_pos[sw] for sw in lost)]
-            ).astype(np.int64)
-            if isinstance(out, np.ndarray):
-                out[rows] = 0.0
-            else:
-                out = out.at[rows].set(0.0)
+        if self.mesh is not None:
+            buf, pebs_all, parity_by_epoch, peak = self._run_window_mesh(
+                params, packets, lost_sets, n_arr, e_count,
+                n_sub_max, width_max)
+            self._check_output_peak(peak)
+        else:
+            out = self._dispatch(params, packets, n_sub_max, width_max)
+            self._check_output_peak(
+                float(jnp.max(jnp.abs(out))) if out.size else 0.0)
+            # §4.2 PEBs from the level-0 rows (::L is a no-op for
+            # cs/cms) — computed before lost cells are zeroed (their
+            # counters are genuine observations of epochs the switch did
+            # sketch).
+            pebs_all = np.asarray(equalize.peb_fleet_device(
+                out[::L], np.tile(n_arr, e_count),
+                np.tile(self.widths, e_count),
+                self.kind)).reshape(e_count, n_frags)
+            # XOR parity per (epoch, group) over the un-zeroed stack:
+            # exact integers below 2^24 make the f32->int32 conversion
+            # lossless, and XOR (unlike a sum) can neither overflow nor
+            # round.
+            parity_by_epoch = None
+            if self.parity_groups is not None:
+                parity_by_epoch = self._window_parity(
+                    out, e_count, rows_per_epoch, n_sub_max, width_max)
+            if any(lost_sets):
+                rows = np.concatenate([
+                    np.arange(i * L, (i + 1) * L) + e * rows_per_epoch
+                    for e, lost in enumerate(lost_sets)
+                    for i in sorted(self._frag_pos[sw] for sw in lost)]
+                ).astype(np.int64)
+                if isinstance(out, np.ndarray):
+                    out[rows] = 0.0
+                else:
+                    out = out.at[rows].set(0.0)
 
-        buf = _WindowBuffer(out, (e_count, rows_per_epoch, n_sub_max,
-                                  width_max))
+            buf = _WindowBuffer(out, (e_count, rows_per_epoch, n_sub_max,
+                                      width_max))
         recs_list: List[WindowRecords] = []
         pebs_list: List[Dict[int, float]] = []
         # snapshot the config dict: a later shrink must not re-slice
@@ -1291,7 +1493,7 @@ class FleetEpochRunner:
                 np.stack([sel_by_e[e] for e in es])
             out += Q.fleet_query_window_device(
                 stack, [self._params_log[e] for e in es], keys, self.kind,
-                frag_sel=sel, single_hop=single_hop)
+                frag_sel=sel, single_hop=single_hop, mesh=self.mesh)
         if host_epochs:
             sel = base if sel_by_e is None else \
                 [sel_by_e[e] for e in host_epochs]
@@ -1343,7 +1545,7 @@ class FleetEpochRunner:
                 np.stack([row_sel_by_e[e][::self.n_levels] for e in es])
             out += Q.um_fleet_query_window_device(
                 stack, [self._params_log[e] for e in es], keys,
-                self.n_levels, frag_sel=sel)
+                self.n_levels, frag_sel=sel, mesh=self.mesh)
         for level in range(self.n_levels) if host_epochs else ():
             lvl_rows = self.row_levels == level
             sel = self._row_sel(path, level) if row_sel_by_e is None else \

@@ -261,7 +261,8 @@ def _per_epoch_sels(frag_sel, n_epochs: int) -> List:
 def fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
                               kind: str,
                               frag_sel: Optional[np.ndarray] = None,
-                              single_hop: bool = False) -> np.ndarray:
+                              single_hop: bool = False,
+                              mesh=None) -> np.ndarray:
     """Device-side twin of ``fleet_query_window``: the same §4.3
     fragment-merge window query, run where the stacked counters already
     live so only the ``(K,)`` estimate vector crosses the host boundary.
@@ -269,26 +270,30 @@ def fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
     ``repro.kernels.sketch_query.fleet_window_query_device`` for the
     argument contract; ``fleet_query_window`` on the host copy of the
     same stack stays the numpy oracle (tests/test_query_device.py).
+    ``mesh``: optional ("switch",) device mesh for a row-sharded stack —
+    the merge runs as a shard_map with an all_gather of only the raw
+    per-row estimate slices (docs/sharding.md).
     """
     from ..kernels.sketch_query import fleet_window_query_device
 
     return fleet_window_query_device(stack, params_by_epoch, keys, kind,
                                      frag_sel=frag_sel,
-                                     single_hop=single_hop)
+                                     single_hop=single_hop, mesh=mesh)
 
 
 def um_fleet_query_window_device(stack, params_by_epoch, keys: np.ndarray,
                                  n_levels: int,
                                  frag_sel: Optional[np.ndarray] = None,
-                                 ) -> np.ndarray:
+                                 mesh=None) -> np.ndarray:
     """All ``n_levels`` UnivMon window estimates in one device call —
     thin re-export of ``repro.kernels.sketch_query.um_window_query_device``
     (the §6.2 per-level inputs; see ``FleetEpochRunner
-    .um_level_window_query`` for the routed entry point)."""
+    .um_level_window_query`` for the routed entry point).  ``mesh`` routes
+    a row-sharded stack through the cross-device merge."""
     from ..kernels.sketch_query import um_window_query_device
 
     return um_window_query_device(stack, params_by_epoch, keys, n_levels,
-                                  frag_sel=frag_sel)
+                                  frag_sel=frag_sel, mesh=mesh)
 
 
 def window_observability(records_by_epoch: Sequence[Sequence],

@@ -1,3 +1,4 @@
 """Device-resident query plane: batched gather/merge over window stacks."""
 from .engine import (KEY_BUCKET_MIN, fleet_window_query_device,  # noqa: F401
-                     key_bucket, um_gsum_device, um_window_query_device)
+                     key_bucket, shard_padded_rows, um_gsum_device,
+                     um_window_query_device)

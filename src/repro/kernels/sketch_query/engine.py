@@ -58,6 +58,8 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ... import sanitize
 from ...core import hashing as H
@@ -152,13 +154,22 @@ def _gather_merge(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
     return _masked_merge(raw, frag_sel, kind=kind).sum(axis=0)  # (K,)
 
 
-def _prep_window_params(stack, params_by_epoch):
+def _prep_window_params(stack, params_by_epoch, allow_row_pad: bool = False):
     """Stack + frozen-ns validation shared by the window-query entry
-    points.  Returns (params (E, R, N_PARAMS), ns, widths)."""
+    points.  Returns (params (E, R, N_PARAMS), ns, widths).
+
+    ``allow_row_pad``: a mesh-sharded stack may carry trailing pad rows
+    (fragments padded so rows divide the switch axis); the param table
+    still covers only the real rows and the merge slices the pad off.
+    """
     params = np.stack([np.asarray(p, np.int32) for p in params_by_epoch])
     e_count, n_rows = params.shape[:2]
-    assert tuple(stack.shape[:2]) == (e_count, n_rows), \
-        f"stack {stack.shape} does not match params ({e_count}, {n_rows})"
+    if allow_row_pad:
+        assert stack.shape[0] == e_count and stack.shape[1] >= n_rows, \
+            f"stack {stack.shape} does not cover params ({e_count}, {n_rows})"
+    else:
+        assert tuple(stack.shape[:2]) == (e_count, n_rows), \
+            f"stack {stack.shape} does not match params ({e_count}, {n_rows})"
     ns = params[0, :, PARAM_N_SUB]
     widths = params[0, :, PARAM_WIDTH]
     assert (params[:, :, PARAM_N_SUB] == ns).all() and \
@@ -170,7 +181,8 @@ def _prep_window_params(stack, params_by_epoch):
 def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
                               keys: np.ndarray, kind: str,
                               frag_sel: Optional[np.ndarray] = None,
-                              single_hop: bool = False) -> np.ndarray:
+                              single_hop: bool = False,
+                              mesh=None) -> np.ndarray:
     """Batched window point-query on a still-resident window stack.
 
     Args:
@@ -193,6 +205,14 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
       single_hop: apply the §4.4 second-subepoch average on PARAM_MIT
         rows (the queried flows are single-hop — uniform per path
         group).
+      mesh: optional ``("switch",)`` device mesh.  When given, the stack
+        is treated as row-sharded over the switch axis (possibly with
+        trailing pad rows so rows divide the axis) and the merge runs as
+        a ``shard_map``: each shard gathers its own rows' raw estimates
+        locally and ``all_gather``s only the ``(E, R, K)`` estimate
+        slices — never the counter shards — into the same masked
+        min/median merge.  Bit-identical to ``mesh=None`` on the
+        un-padded rows (docs/sharding.md).
 
     Returns the (K,) float64 window estimates — numerically within a few
     f32 ULPs of ``repro.core.query.fleet_query_window`` on the host copy
@@ -200,7 +220,8 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     """
     keys = np.asarray(keys, dtype=np.uint32)
     n_keys = len(keys)
-    params, ns, widths = _prep_window_params(stack, params_by_epoch)
+    params, ns, widths = _prep_window_params(stack, params_by_epoch,
+                                             allow_row_pad=mesh is not None)
     n_rows = params.shape[1]
     if frag_sel is None:
         frag_sel = np.ones(n_rows, bool)
@@ -221,6 +242,11 @@ def fleet_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     kb = key_bucket(n_keys)
     keys_pad = np.zeros(kb, np.uint32)
     keys_pad[:n_keys] = keys
+    if mesh is not None:
+        est = _sharded_window_query(mesh, stack, params, ns, widths, sel2,
+                                    mit_rows, keys_pad, kind=kind,
+                                    mitigate=mitigate)
+        return est[:n_keys].astype(np.float64)
     # Everything inside the guard is device compute with *explicit*
     # boundary crossings only (jnp.asarray in, jax.device_get out):
     # under REPRO_SANITIZE=1 any implicit transfer raises.  The padded
@@ -277,7 +303,7 @@ def _gather_merge_um(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
 def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
                            keys: np.ndarray, n_levels: int,
                            frag_sel: Optional[np.ndarray] = None,
-                           ) -> np.ndarray:
+                           mesh=None) -> np.ndarray:
     """All ``n_levels`` UnivMon Count-Sketch window estimates for a key
     batch in ONE batched device call (the §6.2 G-sum inputs).
 
@@ -300,7 +326,8 @@ def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     """
     keys = np.asarray(keys, dtype=np.uint32)
     n_keys = len(keys)
-    params, ns, widths = _prep_window_params(stack, params_by_epoch)
+    params, ns, widths = _prep_window_params(stack, params_by_epoch,
+                                             allow_row_pad=mesh is not None)
     n_rows = params.shape[1]
     assert n_rows % n_levels == 0
     n_frags = n_rows // n_levels
@@ -320,6 +347,10 @@ def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
     kb = key_bucket(n_keys)
     keys_pad = np.zeros(kb, np.uint32)
     keys_pad[:n_keys] = keys
+    if mesh is not None:
+        est = _sharded_um_query(mesh, stack, params, ns, widths, sel2,
+                                keys_pad, n_levels=n_levels)
+        return est[:, :n_keys].astype(np.float64)
     # Same explicit-boundary discipline as fleet_window_query_device:
     # device compute under the (opt-in) transfer guard, one device_get
     # out, host-side slicing.
@@ -335,6 +366,178 @@ def um_window_query_device(stack, params_by_epoch: Sequence[np.ndarray],
         # (L, KB) floats across the boundary — no counter-stack bytes
         est = jax.device_get(out)
     return est[:, :n_keys].astype(np.float64)
+
+
+# --- cross-device sharded merge (the "switch" mesh axis) -------------------
+#
+# The fleet runner can shard a window stack's rows over a 1-D ("switch",)
+# device mesh (fragments are the shard unit — a fragment's n_levels
+# virtual rows never split; trailing *pad fragments* make the row count
+# divide the axis).  The merge below is the cross-device twin of
+# `_gather_merge`: every shard runs `_gather_raw` on its LOCAL rows only,
+# then `all_gather`s the tiny (E, R_local, K) raw per-row estimate slices
+# — never the (E, R_local, S, W) counter shards — so the full-row masked
+# min/median merge (and nothing else) is replicated.  The gather is
+# elementwise per row and `all_gather(tiled=True)` concatenates shard
+# blocks in exactly the single-device row order, so the merged estimates
+# are bit-identical to the unsharded path (docs/sharding.md).
+
+
+def shard_padded_rows(n_rows: int, n_shards: int, n_levels: int = 1) -> int:
+    """Padded row count for sharding ``n_rows`` fleet rows over
+    ``n_shards`` devices: fragments (groups of ``n_levels`` rows) pad up
+    to a multiple of the shard count, keeping level blocks intact."""
+    n_frags, rem = divmod(int(n_rows), int(n_levels))
+    assert rem == 0, (n_rows, n_levels)
+    f_pad = -(-n_frags // int(n_shards)) * int(n_shards)
+    return f_pad * int(n_levels)
+
+
+def _pad_rows(a, r_pad: int, fill, axis: int = -1):
+    """Zero-cost when already padded; else np.pad with ``fill``."""
+    a = np.asarray(a)
+    if a.shape[axis] == r_pad:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, r_pad - a.shape[axis])
+    return np.pad(a, pad, constant_values=fill)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_gather_merge(mesh, kind: str, mitigate: bool, n_rows: int):
+    """jit(shard_map) merge for (mesh, kind, mitigate, real row count).
+
+    Cached per mesh so steady-state replays hit the compile cache; the
+    padded row count and key bucket are shape-keyed by jit itself.
+    """
+    row = P(None, "switch")
+    per_row = P("switch")
+
+    def body(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+             frag_sel, mit_rows, keys):
+        sanitize.note_trace("sketch_query._sharded_gather_merge")
+        raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns,
+                          widths, mit_rows, keys,
+                          signed=kind in ("cs", "um"), mitigate=mitigate)
+        # Only the (E, R_local, K) raw estimates cross devices.
+        raw = jax.lax.all_gather(raw, "switch", axis=1, tiled=True)
+        return _masked_merge(raw[:, :n_rows], frag_sel,
+                             kind=kind).sum(axis=0)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "switch", None, None), row, row, row,
+                  per_row, per_row, P(), per_row, P()),
+        out_specs=P(), check_rep=False))
+
+
+def _sharded_window_query(mesh, stack, params, ns, widths, sel2, mit_rows,
+                          keys_pad, *, kind: str, mitigate: bool):
+    """Mesh leg of ``fleet_window_query_device``: pad the per-row param
+    columns to the stack's padded row count, commit every input to the
+    mesh explicitly (legal under the armed transfer guard), run the
+    shard_map merge, fetch the (KB,) estimates."""
+    n_shards = mesh.shape["switch"]
+    e_count, n_rows = params.shape[:2]
+    want = shard_padded_rows(n_rows, n_shards)
+    if int(stack.shape[1]) < want:
+        # unpadded (host) caller: zero rows shard like any other pad
+        stack = _pad_rows(stack, want, 0.0, axis=1)
+    r_pad = int(stack.shape[1])
+    if r_pad % n_shards or r_pad < n_rows:
+        raise ValueError(
+            f"sharded stack rows {r_pad} do not cover {n_rows} param rows "
+            f"in multiples of the switch axis ({n_shards})")
+    col = _pad_rows(params[:, :, PARAM_COL_SEED].astype(np.uint32), r_pad, 0)
+    sign = _pad_rows(params[:, :, PARAM_SIGN_SEED].astype(np.uint32), r_pad, 0)
+    sub = _pad_rows(params[:, :, PARAM_SUB_SEED].astype(np.uint32), r_pad, 0)
+    # Pad rows carry (n=1, width=4) so their hash math stays defined; the
+    # merge slices them off right after the all_gather.
+    ns_p = _pad_rows(ns.astype(np.int32), r_pad, 1)
+    w_p = _pad_rows(widths.astype(np.int32), r_pad, 4)
+    mit_p = _pad_rows(mit_rows, r_pad, False)
+    sel_full = np.ascontiguousarray(
+        np.broadcast_to(sel2, (e_count, n_rows)))
+    row_sh = NamedSharding(mesh, P(None, "switch"))
+    per_row_sh = NamedSharding(mesh, P("switch"))
+    rep = NamedSharding(mesh, P())
+    fn = _sharded_gather_merge(mesh, kind, bool(mitigate), n_rows)
+    with sanitize.transfer_guard():
+        out = fn(
+            jax.device_put(jnp.asarray(stack),
+                           NamedSharding(mesh, P(None, "switch", None, None))),
+            jax.device_put(col, row_sh), jax.device_put(sign, row_sh),
+            jax.device_put(sub, row_sh), jax.device_put(ns_p, per_row_sh),
+            jax.device_put(w_p, per_row_sh), jax.device_put(sel_full, rep),
+            jax.device_put(mit_p, per_row_sh), jax.device_put(keys_pad, rep))
+        return jax.device_get(out)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_gather_merge_um(mesh, n_levels: int, n_rows: int):
+    """jit(shard_map) all-levels UnivMon merge (cross-device twin of
+    ``_gather_merge_um``; fragment shard unit keeps level blocks local)."""
+    row = P(None, "switch")
+    per_row = P("switch")
+
+    def body(stack, col_seeds, sign_seeds, sub_seeds, ns, widths,
+             frag_sel, keys):
+        sanitize.note_trace("sketch_query._sharded_gather_merge_um")
+        e_count = stack.shape[0]
+        n_frags = n_rows // n_levels
+        raw = _gather_raw(stack, col_seeds, sign_seeds, sub_seeds, ns,
+                          widths, None, keys, signed=True, mitigate=False)
+        raw = jax.lax.all_gather(raw, "switch", axis=1, tiled=True)
+        raw = (raw[:, :n_rows]
+               .reshape(e_count, n_frags, n_levels, -1)
+               .transpose(0, 2, 1, 3)
+               .reshape(e_count * n_levels, n_frags, -1))
+        sel = jnp.repeat(frag_sel, n_levels, axis=0)      # (E*L, F)
+        merged = _masked_merge(raw, sel, kind="um")       # (E*L, K)
+        return merged.reshape(e_count, n_levels, -1).sum(axis=0)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "switch", None, None), row, row, row,
+                  per_row, per_row, P(), P()),
+        out_specs=P(), check_rep=False))
+
+
+def _sharded_um_query(mesh, stack, params, ns, widths, sel2, keys_pad, *,
+                      n_levels: int):
+    """Mesh leg of ``um_window_query_device``."""
+    n_shards = mesh.shape["switch"]
+    e_count, n_rows = params.shape[:2]
+    want = shard_padded_rows(n_rows, n_shards, n_levels)
+    if int(stack.shape[1]) < want:
+        stack = _pad_rows(stack, want, 0.0, axis=1)
+    r_pad = int(stack.shape[1])
+    if r_pad % n_shards or r_pad < n_rows or r_pad % n_levels:
+        raise ValueError(
+            f"sharded um stack rows {r_pad} do not cover {n_rows} param "
+            f"rows in level-aligned multiples of the switch axis "
+            f"({n_shards} shards, {n_levels} levels)")
+    col = _pad_rows(params[:, :, PARAM_COL_SEED].astype(np.uint32), r_pad, 0)
+    sign = _pad_rows(params[:, :, PARAM_SIGN_SEED].astype(np.uint32), r_pad, 0)
+    sub = _pad_rows(params[:, :, PARAM_SUB_SEED].astype(np.uint32), r_pad, 0)
+    ns_p = _pad_rows(ns.astype(np.int32), r_pad, 1)
+    w_p = _pad_rows(widths.astype(np.int32), r_pad, 4)
+    n_frags = n_rows // n_levels
+    sel_full = np.ascontiguousarray(
+        np.broadcast_to(sel2, (e_count, n_frags)))
+    row_sh = NamedSharding(mesh, P(None, "switch"))
+    per_row_sh = NamedSharding(mesh, P("switch"))
+    rep = NamedSharding(mesh, P())
+    fn = _sharded_gather_merge_um(mesh, int(n_levels), n_rows)
+    with sanitize.transfer_guard():
+        out = fn(
+            jax.device_put(jnp.asarray(stack),
+                           NamedSharding(mesh, P(None, "switch", None, None))),
+            jax.device_put(col, row_sh), jax.device_put(sign, row_sh),
+            jax.device_put(sub, row_sh), jax.device_put(ns_p, per_row_sh),
+            jax.device_put(w_p, per_row_sh), jax.device_put(sel_full, rep),
+            jax.device_put(keys_pad, rep))
+        return jax.device_get(out)
 
 
 @functools.partial(jax.jit, static_argnames=("g", "k_heavy", "n_levels"))

@@ -22,6 +22,29 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_switch_mesh(n_devices: int | None = None, *, devices=None):
+    """1-D ``("switch",)`` mesh for the sharded fragment fleet.
+
+    Fragment rows of the fleet param table / window stacks partition over
+    this axis (see docs/sharding.md).  ``n_devices`` defaults to every
+    visible device; pass a smaller count (or an explicit ``devices``
+    sequence) to build sub-meshes — e.g. a 1-device mesh for the
+    sharded-vs-single-device parity tests.  ``jax.make_mesh`` takes the
+    first ``n_devices`` of ``jax.devices()`` when the product is smaller
+    than the device count, so this works under
+    ``--xla_force_host_platform_device_count=N`` without slicing here.
+    """
+    if devices is not None:
+        return jax.make_mesh((len(devices),), ("switch",), devices=devices)
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    return jax.make_mesh((n,), ("switch",))
+
+
+def switch_axis_size(mesh) -> int:
+    """Shard count of the fleet's ``switch`` axis (1 if absent)."""
+    return mesh.shape["switch"] if "switch" in mesh.axis_names else 1
+
+
 def data_axis_size(mesh) -> int:
     size = 1
     for name in ("pod", "data"):

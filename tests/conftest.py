@@ -1,7 +1,48 @@
+"""Shared test setup: import paths + forced multi-device CPU.
+
+``--xla_force_host_platform_device_count=8`` must reach XLA before the
+jax backend initializes, so it is MERGED into ``XLA_FLAGS`` here, at
+conftest import time — pytest imports conftest before any test module,
+and no repo module imports jax at module scope.  Existing flags in the
+environment are preserved (never clobbered), and the flag is skipped if
+the environment already forces a device count.  Tests that genuinely
+need multiple devices depend on the ``multidevice`` fixture, which
+skips LOUDLY when the flag could not take effect (e.g. jax was already
+initialized, or a real accelerator platform is active) — never passing
+vacuously on one device.
+"""
 import os
 import sys
+
+import pytest
 
 _HERE = os.path.dirname(__file__)
 sys.path.insert(0, os.path.join(_HERE, "..", "src"))
 # Repo root, so tests can import the analysis plane (tools.analysis).
 sys.path.insert(0, os.path.join(_HERE, ".."))
+
+FORCED_DEVICES = 8
+_FLAG = f"--xla_force_host_platform_device_count={FORCED_DEVICES}"
+
+if "jax" not in sys.modules \
+        and "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    """Session guard for multi-device tests: yields the device count
+    (>= ``FORCED_DEVICES``) or skips with the reason the forced host
+    device count did not take effect."""
+    import jax
+
+    n = jax.device_count()
+    if n < FORCED_DEVICES:
+        pytest.skip(
+            f"needs {FORCED_DEVICES} devices, have {n}: "
+            f"'{_FLAG}' did not take effect (jax imported before "
+            "conftest, or XLA_FLAGS preset without it); export "
+            f"XLA_FLAGS='{_FLAG}' and rerun")
+    return n

@@ -18,18 +18,28 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def _run(body: str) -> None:
+    # The forced-device-count flag is MERGED into the child's XLA_FLAGS
+    # (setting os.environ after jax import would be a silent no-op, and
+    # clobbering would drop flags the caller exported); the child then
+    # asserts the count actually took, so a misconfigured environment
+    # fails loudly instead of testing a 1-device mesh vacuously.
+    env = dict(os.environ)
+    flag = "--xla_force_host_platform_device_count=8"
+    if "xla_force_host_platform_device_count" not in \
+            env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
     code = textwrap.dedent("""
-        import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys
         sys.path.insert(0, %r)
         import numpy as np
         import jax, jax.numpy as jnp
+        assert jax.device_count() >= 8, \\
+            f"forced host device count did not take: {jax.device_count()}"
         from jax.sharding import NamedSharding, PartitionSpec as P
         mesh = jax.make_mesh((2, 4), ("data", "model"))
     """ % os.path.join(ROOT, "src")) + textwrap.dedent(body)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, timeout=900)
+                       text=True, timeout=900, env=env)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
 
 

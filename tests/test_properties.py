@@ -208,6 +208,65 @@ def test_masked_merge_matches_numpy_oracle(mask_bits, kind, seed):
 
 
 @settings(deadline=None, max_examples=15)
+@given(st.integers(0, 2**12 - 1),          # (E=2) x (F=6) liveness bitmask
+       st.sampled_from(["cs", "cms"]),
+       st.sampled_from([2, 4, 8]),
+       st.integers(0, 2**31 - 1))
+def test_sharded_merge_matches_host_oracle(mask_bits, kind, n_shards,
+                                           seed, multidevice):
+    """The cross-device fleet merge (PR 10), for ANY fragment->shard
+    assignment (a random permutation of the fragment rows — contiguous
+    shard blocks then hold a random fragment subset, including empty /
+    pad-only shards since F=6 never divides the axis) and ANY on-path /
+    liveness mask: bit-equal to the single-device device path and
+    allclose to the host ``fleet_query_epoch`` oracle; all-masked epochs
+    still raise.  Shapes are fixed so the jit cache holds one compile
+    per (kind, n_shards)."""
+    from repro.core.disketch import DiSketchSystem  # noqa: F401 (jax init)
+    from repro.kernels.sketch_query import fleet_window_query_device
+    from repro.kernels.sketch_update import fleet as FK
+    from repro.launch.mesh import make_switch_mesh
+
+    e_count, n_frags, n_sub, width = 2, 6, 4, 256
+    rng = np.random.RandomState(seed % 2**31)
+    perm = rng.permutation(n_frags)            # fragment -> row slot
+    sel = np.array([(mask_bits >> i) & 1 for i in range(e_count * n_frags)],
+                   bool).reshape(e_count, n_frags)[:, perm]
+    stack = rng.randint(-200, 200,
+                        (e_count, n_frags, n_sub, width)).astype(np.float32)
+    if kind == "cms":
+        stack = np.abs(stack)
+    params = np.zeros((e_count, n_frags, FK.N_PARAMS), np.int32)
+    for e in range(e_count):
+        for f_slot, f in enumerate(perm):
+            params[e, f_slot, FK.PARAM_COL_SEED] = 11 + 17 * e + f
+            params[e, f_slot, FK.PARAM_SIGN_SEED] = 22 + 17 * e + f
+            params[e, f_slot, FK.PARAM_SUB_SEED] = 33 + 17 * e + f
+            params[e, f_slot, FK.PARAM_WIDTH] = width
+            params[e, f_slot, FK.PARAM_N_SUB] = n_sub
+            params[e, f_slot, FK.PARAM_LOG2_N_SUB] = 2
+    keys = rng.randint(0, 1 << 20, 16).astype(np.uint32)
+    mesh = make_switch_mesh(n_shards)
+    if not sel.any(axis=1).all():
+        with pytest.raises(ValueError, match="no on-path fragment"):
+            fleet_window_query_device(stack, list(params), keys, kind,
+                                      frag_sel=sel, mesh=mesh)
+        return
+    got = fleet_window_query_device(stack, list(params), keys, kind,
+                                    frag_sel=sel, mesh=mesh)
+    single = fleet_window_query_device(stack, list(params), keys, kind,
+                                       frag_sel=sel)
+    np.testing.assert_array_equal(got, single)
+    widths = np.full(n_frags, width, np.int64)
+    ref = sum(Q.fleet_query_epoch(
+        stack[e], params[e, :, FK.PARAM_COL_SEED],
+        params[e, :, FK.PARAM_SIGN_SEED], params[e, :, FK.PARAM_SUB_SEED],
+        params[e, :, FK.PARAM_N_SUB].astype(np.int64), widths, keys,
+        kind, frag_sel=sel[e]) for e in range(e_count))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=15)
 @given(st.integers(100, 100000), st.sampled_from([1, 2, 4, 8, 16, 64]),
        st.sampled_from(["count", "limb", "f32"]))
 def test_select_geometry_respects_budget(width, n_sub, mode):

@@ -16,6 +16,10 @@ own cost model (``select_geometry``/``vmem_bytes``) and through
     ``(rows, W/LANE, LANE)`` f32 layout.  ``eval_shape`` traces the
     kernel body but never runs it, so this layer needs no TPU and
     finishes in seconds;
+  * ``sharded-*`` — the device-mesh fleet's row padding is a
+    level-aligned multiple of the shard count, and the per-shard
+    ragged dispatch (global geometry at the shard's row count) keeps
+    the vmem / pow2 / layout contracts for 1–8 shards;
   * ``peak-guard`` — AST check that every update path routes its output
     through the 2^24 exact-integer guard: each ``return`` of
     ``ops.sketch_update`` is a ``_guard_peak(...)`` call (this covers
@@ -217,6 +221,93 @@ def _check_eval_shapes(findings: List[Finding]) -> None:
                 f"expected {want} float32"))
 
 
+def _check_sharded(findings: List[Finding]) -> None:
+    """Sharded-fleet contracts (docs/sharding.md), device-free.
+
+    The device-mesh runner dispatches each shard through the ordinary
+    ragged fleet wrapper over the shard's own rows, with the *global*
+    ``(n_sub_max, width_max)`` geometry — so the single-device vmem /
+    pow2 contracts must keep holding at every shard row count, and the
+    row padding must stay shard-divisible and level-aligned (a level
+    block split across shards would break the all_gather row order the
+    bit-identity argument rests on).  All checks run via eval_shape /
+    arithmetic only: no mesh, no devices, so the lint job covers them.
+    """
+    import functools
+
+    import jax
+    import numpy as np
+
+    from repro.kernels.sketch_query import shard_padded_rows
+    from repro.kernels.sketch_update import fleet as FK
+    from repro.kernels.sketch_update.kernel import (
+        LANE, VMEM_BUDGET_BYTES, pow2_width_cap, select_geometry,
+        vmem_bytes)
+
+    def shapes(*specs):
+        return [jax.ShapeDtypeStruct(s, d) for s, d in specs]
+
+    for n_frags, n_sub_max, width_max, n_levels in FLEET_CASES:
+        n_rows = n_frags * n_levels
+        for n_shards in (1, 2, 4, 8):
+            r_pad = shard_padded_rows(n_rows, n_shards, n_levels)
+            if r_pad < n_rows or r_pad % n_shards or r_pad % n_levels \
+                    or (r_pad // n_shards) % n_levels:
+                findings.append(Finding(
+                    "sharded-rows", _SRC, 1,
+                    f"shard_padded_rows({n_rows}, {n_shards}, "
+                    f"{n_levels}) = {r_pad} is not a level-aligned "
+                    "multiple of the shard count covering every row"))
+                continue
+            # Per-shard dispatch geometry: global (n_sub_max,
+            # width_max) at the shard's row count must still be
+            # MXU-aligned and inside the vmem budget.
+            blk, w_blk = select_geometry(width_max, n_sub_max, "f32")
+            w_blk = min(w_blk, pow2_width_cap(width_max))
+            if blk % 128 or w_blk % LANE or (w_blk & (w_blk - 1)):
+                findings.append(Finding(
+                    "sharded-pow2", _SRC, 1,
+                    f"per-shard geometry ({blk}, {w_blk}) for "
+                    f"width={width_max} n_sub={n_sub_max} is not "
+                    "MXU-aligned"))
+            used = vmem_bytes(blk, w_blk, n_sub_max, "f32")
+            if used > VMEM_BUDGET_BYTES:
+                findings.append(Finding(
+                    "sharded-vmem", _SRC, 1,
+                    f"per-shard geometry ({blk}, {w_blk}) for "
+                    f"width={width_max} n_sub={n_sub_max} needs "
+                    f"{used} B > budget {VMEM_BUDGET_BYTES} B"))
+            rows_shard = r_pad // n_shards
+            padded = width_max + (-width_max) % w_blk
+            csr_blk = 256
+            nb = 2 * max(rows_shard // n_levels, 1)
+            k, v, t, prm, bf = shapes(
+                ((nb * csr_blk,), np.uint32),
+                ((nb * csr_blk,), np.float32),
+                ((nb * csr_blk,), np.uint32),
+                ((rows_shard, FK.N_PARAMS), np.int32),
+                ((nb,), np.int32))
+            fn = functools.partial(
+                FK.fleet_update_ragged_pallas, n_sub_max=n_sub_max,
+                padded_width=padded, log2_te=16, signed=True,
+                blk=csr_blk, w_blk=w_blk, value_mode="f32",
+                n_levels=n_levels, interpret=True)
+            try:
+                out = jax.eval_shape(fn, k, v, t, prm, bf)
+            except Exception as e:      # analysis: ignore[silent-except]
+                findings.append(Finding(
+                    "sharded-eval-shape", _SRC, 1,
+                    f"per-shard ragged dispatch ({rows_shard} rows, "
+                    f"{n_shards} shards) failed abstract eval: {e!r}"))
+                continue
+            want = (rows_shard, n_sub_max, padded // LANE, LANE)
+            if tuple(out.shape) != want or out.dtype != np.float32:
+                findings.append(Finding(
+                    "sharded-eval-shape", _SRC, 1,
+                    f"per-shard ragged dispatch -> {out.shape} "
+                    f"{out.dtype}, expected {want} float32"))
+
+
 def _returns_of(fn: ast.FunctionDef):
     """Return statements belonging to ``fn`` itself (not nested defs)."""
     out = []
@@ -298,5 +389,6 @@ def run_contracts(root: str) -> List[Finding]:
     _check_geometry(findings)
     _check_packing(findings)
     _check_eval_shapes(findings)
+    _check_sharded(findings)
     _check_peak_guard(root, findings)
     return findings

@@ -39,6 +39,11 @@ KERNEL_BOUNDARY_FUNCS: Dict[str, Set[str]] = {
         "fleet_window_query_device",
         "um_window_query_device",
         "um_gsum_device",
+        # sharded twins: host params sharded in, only (K,) estimates
+        # cross back (docs/sharding.md); _pad_rows pads host inputs
+        "_pad_rows",
+        "_sharded_window_query",
+        "_sharded_um_query",
     },
 }
 
